@@ -1,0 +1,70 @@
+"""Run the paper's full 1332-experiment grid and persist results.
+
+6 workflows x 37 scale ratios x 6 init proportions, exactly the study of
+paper §6-7.  Results land in benchmarks/results/paper_grid.json and are read
+by the per-figure benchmark functions in benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, run_baselines,
+                        run_packet_grid)
+from repro.workload.lublin import paper_workloads
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+GRID_PATH = os.path.join(RESULTS_DIR, "paper_grid.json")
+
+
+def run_full_grid(n_jobs: int | None = None, seed: int = 0) -> dict:
+    """n_jobs=None -> the paper's 5000; smaller for smoke runs."""
+    flows = paper_workloads(seed=seed)
+    if n_jobs is not None:
+        import dataclasses
+        from repro.workload.lublin import WorkloadParams, generate_workload
+        flows = {name: generate_workload(dataclasses.replace(
+            wl.params, n_jobs=n_jobs)) for name, wl in flows.items()}
+
+    out = {"scale_ratios": list(PAPER_SCALE_RATIOS),
+           "init_props": list(PAPER_INIT_PROPS),
+           "workloads": {}, "baselines": {}, "timing": {}}
+    for name, wl in flows.items():
+        t0 = time.time()
+        grid = run_packet_grid(wl)
+        dt = time.time() - t0
+        n_exp = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
+        out["workloads"][name] = {
+            f: np.asarray(getattr(grid, f)).tolist()
+            for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
+                      "useful_util", "n_groups", "ok")}
+        out["timing"][name] = {"seconds": dt, "experiments": n_exp,
+                               "sec_per_experiment": dt / n_exp}
+        print(f"[paper_sweep] {name}: {n_exp} experiments in {dt:.1f}s "
+              f"({dt / n_exp * 1e3:.1f} ms/experiment)", flush=True)
+        bl = run_baselines(wl)
+        out["baselines"][name] = {
+            alg: {f: np.asarray(getattr(m, f)).tolist()
+                  for f in ("avg_wait", "med_wait", "full_util",
+                            "useful_util")}
+            for alg, m in bl.items()}
+    return out
+
+
+def main():
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    t0 = time.time()
+    res = run_full_grid()
+    res["total_seconds"] = time.time() - t0
+    with open(GRID_PATH, "w") as f:
+        json.dump(res, f)
+    n = sum(t["experiments"] for t in res["timing"].values())
+    print(f"[paper_sweep] total: {n} Packet experiments (+12 baseline runs) "
+          f"in {res['total_seconds']:.1f}s -> {GRID_PATH}")
+
+
+if __name__ == "__main__":
+    main()

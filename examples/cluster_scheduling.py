@@ -1,0 +1,46 @@
+"""The paper's technique as an ML-cluster feature: Packet scheduling of
+training jobs whose initialization = XLA compile + checkpoint restore.
+
+Sweeps the scale ratio for a 1024-chip cluster running a mix of
+(arch x shape) job types — with chip failures and stragglers enabled —
+and prints the same trade-off the paper measures for HPC jobs, plus the
+fault-tolerance accounting.
+
+  PYTHONPATH=src python examples/cluster_scheduling.py
+"""
+import numpy as np
+
+from repro.cluster import ClusterConfig, ClusterSim, JobType
+from repro.cluster.scheduler import workload_from_arrival_rate
+
+# job types: initialization = measured compile+restore time per arch cell
+TYPES = [
+    JobType("granite-3-2b:train_4k", init_time=90.0, tp_degree=16),
+    JobType("yi-6b:train_4k", init_time=150.0, tp_degree=16),
+    JobType("qwen2-moe-a2.7b:train_4k", init_time=240.0, tp_degree=16),
+    JobType("arctic-480b:eval", init_time=600.0, tp_degree=64),
+]
+
+JOBS = 300
+HORIZON = 6 * 3600.0
+MEAN_WORK = 64 * 900.0          # chip-seconds per job
+
+print(f"{'k':>6} | {'avg wait':>9} {'med wait':>9} {'groups':>6} "
+      f"{'full util':>9} {'useful':>7} {'fails':>5} {'lost chip-h':>11}")
+for k in (0.25, 0.5, 1, 2, 4, 8, 16, 64):
+    sim = ClusterSim(TYPES, ClusterConfig(
+        n_chips=1024, scale_ratio=k, ckpt_period=300.0,
+        mtbf_chip_hours=200.0, straggler_prob=0.03, seed=7))
+    for j in workload_from_arrival_rate(TYPES, JOBS, HORIZON, MEAN_WORK,
+                                        seed=7):
+        sim.submit(j)
+    m = sim.run()
+    assert m["unfinished"] == 0
+    print(f"{k:6.2f} | {m['avg_wait']:9.1f} {m['med_wait']:9.1f} "
+          f"{m['groups']:6d} {m['full_util']:9.3f} {m['useful_util']:7.3f} "
+          f"{m['failures']:5d} {m['lost_chip_seconds'] / 3600:11.1f}")
+
+print("\nsame trade-off as the paper's Figs 5/11: larger k amortizes "
+      "compile/restore\n(useful fraction up) but concentrates jobs on "
+      "fewer chips (queue time at low k\nexplodes when init dominates; "
+      "full utilization falls as k grows).")

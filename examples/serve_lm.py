@@ -1,0 +1,53 @@
+"""Batched serving: prefill + greedy decode across model families.
+
+Runs the dense path (prefill seeds the KV cache, then batched decode) and
+the recurrent path (xLSTM: O(1)-state decode — the mechanism behind the
+long_500k cell), printing tokens/s for each.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.launch.mesh import make_host_mesh, mesh_axis_sizes
+from repro.models.layers import unbox
+from repro.models.registry import get_family
+from repro.serve.engine import generate
+from repro.sharding import policy as policy_lib
+
+
+def demo(arch: str, B=4, prompt_len=16, max_new=24):
+    cfg = smoke_config(arch, d_model=128, n_heads=4, head_dim=32)
+    mesh = make_host_mesh()
+    pol = policy_lib.resolve(cfg, mesh_axis_sizes(mesh), B, "decode",
+                             seq=prompt_len + max_new)
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(0)
+    params, _ = unbox(fam.init_params(cfg, pol, key))
+    prompts = np.asarray(jax.random.randint(key, (B, prompt_len), 0,
+                                            cfg.vocab_size))
+    embeds = None
+    if cfg.family == "encdec":
+        embeds = jax.random.normal(key, (B, prompt_len, cfg.d_model)) * 0.02
+    with mesh:
+        t0 = time.time()
+        out = generate(cfg, pol, params, prompts, max_new=max_new,
+                       embeds=embeds)
+        dt = time.time() - t0
+    print(f"  {arch:24s} [{cfg.family:6s}] generated {out.shape[1]} tokens "
+          f"x {B} seqs in {dt:5.2f}s ({B * max_new / dt:7.1f} tok/s) "
+          f"sample={out[0][:6].tolist()}")
+    assert out.shape == (B, max_new)
+
+
+if __name__ == "__main__":
+    print("batched greedy serving across families:")
+    demo("yi-6b")                  # dense GQA: prefill -> KV-cache decode
+    demo("qwen2-moe-a2.7b")        # MoE decode
+    demo("xlstm-1.3b")             # recurrent O(1)-state decode
+    demo("recurrentgemma-2b")      # RG-LRU + ring-buffer local attention
+    demo("seamless-m4t-large-v2")  # enc-dec with precomputed cross-KV
+    print("all families served.")

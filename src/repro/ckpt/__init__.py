@@ -1,0 +1,4 @@
+from repro.ckpt.checkpoint import (CheckpointManager, restore_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,4 @@
+from repro.cluster.scheduler import (ClusterConfig, ClusterSim, JobType,
+                                     MLJob, slice_for)
+
+__all__ = ["ClusterConfig", "ClusterSim", "JobType", "MLJob", "slice_for"]

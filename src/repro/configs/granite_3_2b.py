@@ -1,0 +1,11 @@
+"""granite-3-2b [dense] — GQA. [hf:ibm-granite/granite-3.0-2b-base; hf]
+40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155 (padded to 49168)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8,
+    d_ff=8192, vocab_size=49155,
+    rope_theta=10_000.0,
+    param_dtype="bfloat16", compute_dtype="bfloat16", remat="full",
+)

@@ -1,0 +1,51 @@
+"""JMS efficiency metrics (paper §3).
+
+  1. full utilization    — busy node-seconds / (M * window)   (init counts)
+  2. useful utilization  — useful node-seconds / (M * window) (init is idle)
+  3. job queue time      — group start - submit (avg and median)
+  4. queue length        — time-average number of waiting jobs
+
+All metrics are measured over the window [0, last submit] (paper: "from the
+experiment start to the last job submit"); the simulation itself runs to
+drain. All computations are jnp so a whole sweep's metrics stay on device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class Metrics(NamedTuple):
+    avg_wait: jnp.ndarray      # seconds
+    med_wait: jnp.ndarray      # seconds
+    avg_qlen: jnp.ndarray      # jobs
+    full_util: jnp.ndarray     # [0, 1]
+    useful_util: jnp.ndarray   # [0, 1]
+    avg_run_wait: jnp.ndarray  # secondary: wait until job's own run start
+    n_groups: jnp.ndarray
+    ok: jnp.ndarray
+
+
+def efficiency_metrics(submit, result, m_nodes, t_last_submit) -> Metrics:
+    """Compute paper §3 metrics from a DesResult-shaped record.
+
+    Args:
+      submit: [N] job submit times.
+      result: DesResult (from packet or baseline simulators).
+      m_nodes: cluster size M.
+      t_last_submit: metric window end.
+    """
+    window = jnp.maximum(t_last_submit, 1e-9)
+    denom = m_nodes * window
+    wait = jnp.maximum(result.start_t - submit, 0.0)
+    run_wait = jnp.maximum(result.run_start_t - submit, 0.0)
+    return Metrics(
+        avg_wait=wait.mean(),
+        med_wait=jnp.median(wait),
+        avg_qlen=result.qlen_int / window,
+        full_util=result.busy_ns / denom,
+        useful_util=result.useful_ns / denom,
+        avg_run_wait=run_wait.mean(),
+        n_groups=result.n_groups,
+        ok=result.ok)

@@ -1,0 +1,208 @@
+"""Baseline schedulers: FCFS and conservative EASY backfill (rigid jobs).
+
+The paper itself sweeps only the Packet algorithm; its predecessor work
+([1], [4]) compares grouping against the backfill scheduling that production
+JMS use. We implement both baselines on the *rigid* view of the workload
+(each job runs alone on its requested n_i nodes for s + e_i seconds, paying
+its own initialization), with the same fixed-shape `lax.while_loop` DES
+skeleton as `repro.core.des` so results are directly comparable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.des import (DesResult, PackedWorkload, RING, _window_overlap,
+                            INF)
+
+
+class _BaseState(NamedTuple):
+    t: jnp.ndarray
+    next_sub: jnp.ndarray
+    started: jnp.ndarray      # [N] bool (submitted jobs that began running)
+    m_free: jnp.ndarray
+    grp_end: jnp.ndarray      # [RING]
+    grp_m: jnp.ndarray        # [RING]
+    start_t: jnp.ndarray      # [N]
+    qlen_int: jnp.ndarray
+    busy_ns: jnp.ndarray
+    useful_ns: jnp.ndarray
+    n_started: jnp.ndarray
+    iters: jnp.ndarray
+
+
+def _start_job(st: _BaseState, i, s_init, runtime, nodes, t_end_metric):
+    """Start rigid job i now; returns updated state (assumes it fits)."""
+    dtype = st.t.dtype
+    dur = s_init + runtime[i]
+    t_fin = st.t + dur
+    slot = jnp.argmax(jnp.isinf(st.grp_end))
+    m = nodes[i]
+    busy = st.busy_ns + m.astype(dtype) * _window_overlap(st.t, t_fin, t_end_metric)
+    useful = st.useful_ns + m.astype(dtype) * _window_overlap(
+        st.t + s_init, t_fin, t_end_metric)
+    return st._replace(
+        started=st.started.at[i].set(True),
+        m_free=st.m_free - m,
+        grp_end=st.grp_end.at[slot].set(t_fin),
+        grp_m=st.grp_m.at[slot].set(m),
+        start_t=st.start_t.at[i].set(st.t),
+        busy_ns=busy, useful_ns=useful,
+        n_started=st.n_started + 1)
+
+
+def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
+                    max_iters):
+    """Shared submit/finish event loop around a scheduling pass."""
+    N = pw.n_jobs
+    dtype = pw.submit.dtype
+    t_end_metric = pw.t_last_submit
+    idx = jnp.arange(N)
+
+    def cond(st: _BaseState):
+        more = (st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end))
+        return more & (st.iters < max_iters)
+
+    def body(st: _BaseState):
+        t_sub = jnp.where(st.next_sub < N,
+                          pw.submit[jnp.minimum(st.next_sub, N - 1)], INF)
+        slot = jnp.argmin(st.grp_end)
+        t_fin = st.grp_end[slot]
+        take_sub = t_sub <= t_fin
+        t_new = jnp.where(take_sub, t_sub, t_fin)
+
+        waiting = (idx < st.next_sub) & ~st.started
+        qint = st.qlen_int + waiting.sum().astype(dtype) * _window_overlap(
+            st.t, t_new, t_end_metric)
+        st = st._replace(t=t_new, qlen_int=qint)
+
+        st = jax.lax.cond(
+            take_sub,
+            lambda s: s._replace(next_sub=s.next_sub + 1),
+            lambda s: s._replace(m_free=s.m_free + s.grp_m[slot],
+                                 grp_end=s.grp_end.at[slot].set(INF),
+                                 grp_m=s.grp_m.at[slot].set(0)),
+            st)
+        st = sched_pass(st)
+        return st._replace(iters=st.iters + 1)
+
+    st0 = _BaseState(
+        t=jnp.zeros((), dtype), next_sub=jnp.zeros((), jnp.int32),
+        started=jnp.zeros((N,), bool), m_free=jnp.asarray(m_nodes, jnp.int32),
+        grp_end=jnp.full((RING,), INF, dtype),
+        grp_m=jnp.zeros((RING,), jnp.int32),
+        start_t=jnp.full((N,), INF, dtype),
+        qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
+        useful_ns=jnp.zeros((), dtype), n_started=jnp.zeros((), jnp.int32),
+        iters=jnp.zeros((), jnp.int32))
+
+    st = jax.lax.while_loop(cond, body, st0)
+    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & jnp.all(st.started)
+    return DesResult(start_t=st.start_t,
+                     run_start_t=st.start_t + s_init,
+                     qlen_int=st.qlen_int, busy_ns=st.busy_ns,
+                     useful_ns=st.useful_ns, n_groups=st.n_started,
+                     makespan=st.t, ok=ok)
+
+
+def simulate_fcfs(pw: PackedWorkload, s_init, m_nodes,
+                  max_iters: int | None = None) -> DesResult:
+    """Strict FCFS: the head of the queue blocks everything behind it."""
+    N = pw.n_jobs
+    s_init = jnp.asarray(s_init, pw.submit.dtype)
+    idx = jnp.arange(N)
+    if max_iters is None:
+        max_iters = 4 * N + 64
+
+    def sched_pass(st: _BaseState):
+        def cond(st):
+            waiting = (idx < st.next_sub) & ~st.started
+            head = jnp.argmax(waiting)
+            fits = jnp.any(waiting) & (pw.nodes[head] <= st.m_free)
+            return fits & jnp.any(jnp.isinf(st.grp_end))
+
+        def body(st):
+            waiting = (idx < st.next_sub) & ~st.started
+            head = jnp.argmax(waiting)
+            return _start_job(st, head, s_init, pw.runtime, pw.nodes,
+                              pw.t_last_submit)
+
+        return jax.lax.while_loop(cond, body, st)
+
+    return _event_skeleton(pw, s_init, m_nodes, sched_pass, max_iters)
+
+
+def simulate_backfill(pw: PackedWorkload, s_init, m_nodes,
+                      backfill_depth: int = 64,
+                      max_iters: int | None = None) -> DesResult:
+    """Conservative EASY backfill.
+
+    The head job gets a reservation at the *shadow time* (earliest instant
+    enough nodes will be free); queued jobs within `backfill_depth` may jump
+    ahead iff they fit now and either finish before the shadow time or use
+    only the `extra` nodes not needed by the reservation. Shadow/extra are
+    computed once per pass (conservative, as in production schedulers).
+    """
+    N = pw.n_jobs
+    dtype = pw.submit.dtype
+    s_init = jnp.asarray(s_init, dtype)
+    idx = jnp.arange(N)
+    if max_iters is None:
+        max_iters = 4 * N + 64
+
+    def sched_pass(st: _BaseState):
+        # 1) start jobs from the head while they fit
+        def head_cond(st):
+            waiting = (idx < st.next_sub) & ~st.started
+            head = jnp.argmax(waiting)
+            fits = jnp.any(waiting) & (pw.nodes[head] <= st.m_free)
+            return fits & jnp.any(jnp.isinf(st.grp_end))
+
+        def head_body(st):
+            waiting = (idx < st.next_sub) & ~st.started
+            head = jnp.argmax(waiting)
+            return _start_job(st, head, s_init, pw.runtime, pw.nodes,
+                              pw.t_last_submit)
+
+        st = jax.lax.while_loop(head_cond, head_body, st)
+
+        # 2) if a head remains blocked, compute its reservation
+        waiting = (idx < st.next_sub) & ~st.started
+        any_wait = jnp.any(waiting)
+        head = jnp.argmax(waiting)
+        n_head = jnp.where(any_wait, pw.nodes[head], 1)
+
+        order = jnp.argsort(st.grp_end)                 # running jobs by end
+        ends = st.grp_end[order]
+        frees = jnp.cumsum(st.grp_m[order]) + st.m_free
+        enough = frees >= n_head
+        shadow_i = jnp.argmax(enough)
+        shadow = jnp.where(jnp.any(enough), ends[shadow_i], INF)
+        free_at_shadow = jnp.where(jnp.any(enough), frees[shadow_i],
+                                   st.m_free)
+        extra = jnp.maximum(free_at_shadow - n_head, 0)
+
+        # 3) scan up to backfill_depth waiting jobs behind the head
+        cand = jnp.nonzero(waiting & (idx != head), size=backfill_depth,
+                           fill_value=N)[0]
+
+        def bf_body(q, st):
+            i = cand[q]
+            valid = i < N
+            fits_now = valid & (pw.nodes[jnp.minimum(i, N - 1)] <= st.m_free)
+            i_c = jnp.minimum(i, N - 1)
+            ends_before = st.t + s_init + pw.runtime[i_c] <= shadow
+            within_extra = pw.nodes[i_c] <= extra
+            slot_free = jnp.any(jnp.isinf(st.grp_end))
+            do = fits_now & (ends_before | within_extra) & slot_free & any_wait
+            return jax.lax.cond(
+                do,
+                lambda s: _start_job(s, i_c, s_init, pw.runtime, pw.nodes,
+                                     pw.t_last_submit),
+                lambda s: s, st)
+
+        return jax.lax.fori_loop(0, backfill_depth, bf_body, st)
+
+    return _event_skeleton(pw, s_init, m_nodes, sched_pass, max_iters)

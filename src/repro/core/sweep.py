@@ -1,0 +1,119 @@
+"""Sweep driver: the paper's experiment grid as batched XLA programs.
+
+The paper ran 1332 experiments (6 workflows x 37 scale ratios x 6 init
+proportions), each "dozens of minutes" in Alea. Here one workload's whole
+(k x S) grid is a single jitted program, optionally vmapped over the init-
+proportion axis, so the full study runs in minutes on one host and shards
+embarrassingly across pods (experiments are a pure data axis).
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.des import pack_workload, simulate_packet
+from repro.core.metrics import Metrics, efficiency_metrics
+from repro.core.schedulers import simulate_backfill, simulate_fcfs
+from repro.workload.lublin import Workload
+
+# the paper's 37 scale-ratio values: 0.1..1 step .1, 1..10 step 1,
+# 10..100 step 10, 100..1000 step 100
+PAPER_SCALE_RATIOS: tuple[float, ...] = tuple(
+    round(v, 1) for v in itertools.chain(
+        (i / 10 for i in range(1, 10)),
+        range(1, 10),
+        range(10, 100, 10),
+        range(100, 1001, 100)))
+# 5% then 10%..50% step 10% (paper §6)
+PAPER_INIT_PROPS: tuple[float, ...] = (0.05, 0.10, 0.20, 0.30, 0.40, 0.50)
+
+assert len(PAPER_SCALE_RATIOS) == 37
+
+
+def run_packet_grid(wl: Workload,
+                    ks: Sequence[float] = PAPER_SCALE_RATIOS,
+                    s_props: Sequence[float] = PAPER_INIT_PROPS,
+                    dtype=jnp.float32,
+                    vmap_s: bool = False,
+                    vmap_k: bool = False) -> Metrics:
+    """Metrics over the (scale ratio x init proportion) grid of one workload.
+
+    Returns a Metrics pytree whose leaves have shape [len(ks), len(s_props)].
+
+    ``vmap_k`` batches the whole scale-ratio axis into ONE XLA program
+    (the while_loop runs all lanes until the slowest drains) — ~1.9x per
+    experiment on one CPU core by amortizing dispatch, and the layout that
+    parallelizes across accelerator lanes/devices (the experiment axis is
+    pure data parallelism).
+    """
+    pw = pack_workload(wl, dtype)
+    m_nodes = wl.params.nodes
+    s_vals = jnp.asarray([wl.init_time_for_proportion(p) for p in s_props],
+                         dtype)
+    ks_arr = jnp.asarray(ks, dtype)
+
+    def one(k, s):
+        res = simulate_packet(pw, k, s, m_nodes)
+        return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
+
+    if vmap_k:
+        col = jax.jit(jax.vmap(one, in_axes=(0, None)))
+        cols = [col(ks_arr, s) for s in s_vals]
+        return jax.tree.map(
+            lambda *x: np.stack([np.asarray(v) for v in x], axis=1), *cols)
+    if vmap_s:
+        row = jax.jit(jax.vmap(one, in_axes=(None, 0)))
+        rows = [row(k, s_vals) for k in ks_arr]
+    else:
+        one_j = jax.jit(one)
+        rows = [jax.tree.map(lambda *x: jnp.stack(x),
+                             *[one_j(k, s) for s in s_vals])
+                for k in ks_arr]
+    grid = jax.tree.map(lambda *x: np.stack([np.asarray(v) for v in x]), *rows)
+    return grid
+
+
+def run_baselines(wl: Workload, s_props: Sequence[float] = PAPER_INIT_PROPS,
+                  dtype=jnp.float32) -> dict[str, Metrics]:
+    """FCFS and EASY-backfill metrics per init proportion (rigid jobs)."""
+    pw = pack_workload(wl, dtype)
+    m_nodes = wl.params.nodes
+    s_vals = jnp.asarray([wl.init_time_for_proportion(p) for p in s_props],
+                         dtype)
+
+    def fcfs_one(s):
+        res = simulate_fcfs(pw, s, m_nodes)
+        return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
+
+    def bf_one(s):
+        res = simulate_backfill(pw, s, m_nodes)
+        return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
+
+    out = {}
+    for name, fn in (("fcfs", fcfs_one), ("backfill", bf_one)):
+        f = jax.jit(fn)
+        rows = [f(s) for s in s_vals]
+        out[name] = jax.tree.map(
+            lambda *x: np.stack([np.asarray(v) for v in x]), *rows)
+    return out
+
+
+def plateau_threshold(ks: np.ndarray, avg_wait: np.ndarray,
+                      rel_tol: float = 0.05) -> float:
+    """The paper's actionable output: the smallest scale ratio after which
+    the average queue time stays within rel_tol of its large-k plateau."""
+    ks = np.asarray(ks, np.float64)
+    w = np.asarray(avg_wait, np.float64)
+    plateau = np.median(w[-5:])
+    ref = max(plateau, 1e-9)
+    good = np.abs(w - plateau) <= rel_tol * max(ref, 1.0) + 1.0
+    # find first index from which all subsequent are good
+    for i in range(len(ks)):
+        if good[i:].all():
+            return float(ks[i])
+    return float(ks[-1])

@@ -1,0 +1,32 @@
+"""jit'd public wrapper: model layout [B, S, H, hd] <-> kernel layout.
+
+On CPU hosts (tests, smoke runs) the kernel executes in interpret mode;
+on TPU it compiles to Mosaic. The layout transpose is fused by XLA into
+the surrounding projections.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bkv"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = 256, bkv: int = 256):
+    """q: [B, S, H, hd]; k, v: [B, T, KV, hd] -> [B, S, H, hd]."""
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               softcap=softcap, bq=bq, bkv=bkv,
+                               interpret=_on_cpu())
+    return out.swapaxes(1, 2)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/local, softcap)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd]. Returns [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

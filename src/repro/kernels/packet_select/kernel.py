@@ -1,0 +1,90 @@
+"""Fused Packet scheduling step (paper §5 Steps 1-4) — Pallas TPU kernel.
+
+One DES scheduling decision = queue weights over h types, argmax, node
+count, duration — a handful of [H]-wide vector ops. Inside the vmapped
+sweep (hundreds of (k, S) experiments in flight) this is the innermost hot
+loop; fusing it into a single VMEM-resident kernel removes per-op dispatch
+and keeps the whole decision on registers/VMEM. Batched over experiments
+(grid axis 0), with H padded to the 128-lane boundary.
+
+Outputs per experiment: selected type j*, m_group, group duration, and the
+selected queue's total work (for state update on the host side of the DES).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _select_kernel(sumw_ref, sj_ref, pj_ref, oldest_ref, tmax_ref,
+                   nonempty_ref, now_ref, k_ref, mfree_ref,
+                   j_ref, m_ref, dur_ref, work_ref):
+    sum_w = sumw_ref[0]
+    s_j = jnp.maximum(sj_ref[0], 1e-9)
+    now = now_ref[0, 0]
+    k = jnp.maximum(k_ref[0, 0], 1e-9)
+    m_free = mfree_ref[0, 0]
+
+    # Step 2: W(T_j) = C_j * P_j * (1 + T_cur / T_max)
+    c_j = sum_w / s_j
+    t_cur = jnp.maximum(now - oldest_ref[0], 0.0)
+    w = c_j * pj_ref[0] * (1.0 + t_cur / jnp.maximum(tmax_ref[0], 1e-9))
+    w = jnp.where(nonempty_ref[0] > 0, w, NEG_INF)
+    j = jnp.argmax(w)
+
+    # Step 4: m_threshold = ceil(work / (k * s_j)); m_group = min(., m_free)
+    work = sum_w[j]
+    m_thr = jnp.maximum(jnp.ceil(work / (k * s_j[j])), 1.0)
+    m_grp = jnp.maximum(jnp.minimum(m_thr, m_free), 0.0)
+    dur = s_j[j] + work / jnp.maximum(m_grp, 1.0)
+
+    j_ref[0, 0] = j.astype(jnp.int32)
+    m_ref[0, 0] = m_grp
+    dur_ref[0, 0] = dur
+    work_ref[0, 0] = work
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def packet_select(sum_w, s_j, p_j, oldest, t_max, nonempty, now, k, m_free,
+                  *, interpret: bool = False):
+    """Batched fused scheduling decision.
+
+    sum_w, s_j, p_j, oldest, t_max: [N, H] float32; nonempty: [N, H]
+    (0/1 float32); now, k, m_free: [N] float32.
+    Returns (j [N] int32, m_group [N], duration [N], work [N]).
+    """
+    N, H = sum_w.shape
+    pad = (-H) % 128
+    if pad:
+        padw = ((0, 0), (0, pad))
+        sum_w = jnp.pad(sum_w, padw)
+        s_j = jnp.pad(s_j, padw, constant_values=1.0)
+        p_j = jnp.pad(p_j, padw)
+        oldest = jnp.pad(oldest, padw)
+        t_max = jnp.pad(t_max, padw, constant_values=1.0)
+        nonempty = jnp.pad(nonempty, padw)
+    Hp = H + pad
+    vec = lambda: pl.BlockSpec((1, Hp), lambda i: (i, 0))
+    scl = lambda: pl.BlockSpec((1, 1), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        _select_kernel,
+        grid=(N,),
+        in_specs=[vec(), vec(), vec(), vec(), vec(), vec(),
+                  scl(), scl(), scl()],
+        out_specs=[scl(), scl(), scl(), scl()],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 1), jnp.int32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sum_w, s_j, p_j, oldest, t_max, nonempty,
+      now[:, None], k[:, None], m_free[:, None])
+    j, m, dur, work = (o[:, 0] for o in outs)
+    return j, m, dur, work

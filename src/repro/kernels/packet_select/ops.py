@@ -1,0 +1,16 @@
+"""jit'd wrapper with CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.packet_select.kernel import packet_select
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fused_packet_select(sum_w, s_j, p_j, oldest, t_max, nonempty, now, k,
+                        m_free):
+    return packet_select(sum_w, s_j, p_j, oldest, t_max, nonempty, now, k,
+                         m_free, interpret=_on_cpu())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: the Packet policy functions from repro.core.packet."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packet
+
+
+def packet_select_ref(sum_w, s_j, p_j, oldest, t_max, nonempty, now, k,
+                      m_free):
+    """Batched reference of the fused scheduling decision (see kernel.py)."""
+
+    def one(sum_w, s_j, p_j, oldest, t_max, nonempty, now, k, m_free):
+        w = packet.queue_weights(sum_w, s_j, p_j, oldest, now, t_max,
+                                 nonempty > 0)
+        j = jnp.argmax(w)
+        work = sum_w[j]
+        m = packet.group_nodes(work, k, s_j[j],
+                               m_free.astype(jnp.int32)).astype(jnp.float32)
+        dur = packet.group_duration(work, s_j[j], jnp.maximum(m, 1.0))
+        return j.astype(jnp.int32), m, dur, work
+
+    return jax.vmap(one)(sum_w, s_j, p_j, oldest, t_max, nonempty, now, k,
+                         m_free)

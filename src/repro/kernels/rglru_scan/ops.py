@@ -1,0 +1,20 @@
+"""jit'd wrapper used by repro.models.hybrid when attention_impl='pallas'."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import lru_chunked
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def chunked_lru(a, bx, h0=None):
+    """Model-facing API: decay a (not log) as produced by rglru_gates.
+
+    a, bx: [B, S, D]; returns h [B, S, D] (float32)."""
+    log_a = jnp.log(jnp.maximum(a, 1e-37))
+    h, _ = lru_chunked(log_a, bx, h0, interpret=_on_cpu())
+    return h

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the diagonal linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_ref(log_a, b, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t via associative scan.
+
+    log_a, b: [B, S, D]; h0: optional [B, D]. Returns (h, h_last)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h, h[:, -1]

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent.
+
+For every assigned (architecture x input-shape) cell, on the single-pod
+(16 x 16 = 256 chips) and multi-pod (2 x 16 x 16 = 512 chips) production
+meshes:
+
+  * resolve the sharding policy (attention mode, KV replication, expert
+    padding, batch axes),
+  * build the exact step the cell represents (train_step for train shapes,
+    last-token prefill for prefill shapes, serve_step/decode for decode
+    shapes),
+  * ``jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)``
+    and ``.compile()`` — no array is ever allocated,
+  * record ``memory_analysis()`` (proves it fits), ``cost_analysis()``
+    (FLOPs/bytes for the roofline) and the collective traffic parsed from
+    the optimized HLO.
+
+Usage:
+  python -m repro.launch.dryrun --cells yi-6b:train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out benchmarks/results/dryrun.json
+"""
+__doc__ = DOC
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, Shape, cells, get_config, input_specs
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models.config import ModelConfig
+from repro.models.layers import unbox
+from repro.models.registry import get_family
+from repro.sharding import policy as policy_lib
+from repro.train import optim as optim_lib
+from repro.train.step import make_train_step
+
+KEY_SPEC = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def param_specs(cfg: ModelConfig, pol, mesh):
+    """(ShapeDtypeStruct tree, NamedSharding tree) for the parameters —
+    via eval_shape on init: zero allocation."""
+    fam = get_family(cfg)
+    boxed = jax.eval_shape(lambda k: fam.init_params(cfg, pol, k), KEY_SPEC)
+    shapes, axes = unbox(boxed)
+    shard = jax.tree.map(
+        lambda ax: jax.sharding.NamedSharding(mesh, pol.spec(ax)), axes,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+    return shapes, shard
+
+
+def _batch_sharding(cfg, pol, mesh, specs):
+    out = {}
+    for name, s in specs.items():
+        ax = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[name] = jax.sharding.NamedSharding(mesh, pol.spec(ax))
+    return out
+
+
+def _moment_dtype(cfg: ModelConfig) -> str:
+    # >=100B params: bf16 moments (gradient/optimizer compression)
+    return "bfloat16" if cfg.name.startswith("arctic") else "float32"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               remat: str | None = None, strategy: str = "auto"):
+    """Lower + compile one cell. Returns a result dict."""
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = cfg.with_(remat=remat)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes_sizes = mesh_axis_sizes(mesh)
+    pol = policy_lib.resolve(cfg, axes_sizes, shape.batch, shape.kind,
+                             seq=shape.seq, strategy=strategy)
+    fam = get_family(cfg)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "devices": n_dev, "policy": {
+            "strategy": pol.strategy,
+            "attn_mode": pol.attn_mode, "decode_attn": pol.decode_attn,
+            "kv_repeat": pol.kv_repeat, "expert_pad": pol.expert_pad,
+            "batch_axes": str(pol.batch_axes), "notes": list(pol.notes),
+        },
+    }
+    t0 = time.time()
+
+    with mesh:
+        p_shapes, p_shard = param_specs(cfg, pol, mesh)
+        in_specs = input_specs(cfg, shape)
+        b_shard = _batch_sharding(cfg, pol, mesh, in_specs)
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+        if shape.kind == "train":
+            ocfg = optim_lib.AdamWConfig(moment_dtype=_moment_dtype(cfg))
+            step = make_train_step(cfg, pol, ocfg)
+            mdt = jnp.dtype(ocfg.moment_dtype)
+            m_shapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, mdt), p_shapes)
+            state_shapes = {"params": p_shapes, "opt": optim_lib.OptState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                m=m_shapes, v=m_shapes)}
+            state_shard = {"params": p_shard, "opt": optim_lib.OptState(
+                step=repl, m=p_shard, v=p_shard)}
+
+            def step_fn(state, batch):
+                from repro.train.step import TrainState
+                st = TrainState(state["params"], state["opt"])
+                st, mets = step(st, batch)
+                return {"params": st.params, "opt": st.opt}, mets
+
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, repl),
+                donate_argnums=(0,),
+            ).lower(state_shapes, in_specs)
+
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                hidden, _ = fam.forward(cfg, pol, params, batch["tokens"],
+                                        batch.get("embeds"))
+                from repro.models.layers import unembed
+                return unembed(cfg, pol, hidden[:, -1:], params["embed"])
+
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=repl,
+            ).lower(p_shapes, in_specs)
+
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: fam.init_cache(cfg, pol, shape.batch, shape.seq))
+            cax = fam.cache_axes(cfg)
+            cache_shard = jax.tree.map(
+                lambda ax: jax.sharding.NamedSharding(mesh, pol.spec(ax)),
+                cax, is_leaf=lambda x: isinstance(x, tuple) and
+                all(isinstance(e, (str, type(None))) for e in x))
+
+            def decode_fn(params, cache, tokens):
+                return fam.decode_step(cfg, pol, params, cache, tokens)
+
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(p_shard, cache_shard,
+                              b_shard["tokens"]),
+                out_shardings=(repl, cache_shard),
+                donate_argnums=(1,),
+            ).lower(p_shapes, cache_shapes, in_specs["tokens"])
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ca = compiled.cost_analysis() or {}
+        rec["flops"] = float(ca.get("flops", -1.0))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", -1.0))
+        rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes")
+                if hasattr(ma, k)} if ma is not None else None
+        except Exception as e:          # CPU backend may not implement it
+            rec["memory_analysis"] = f"unavailable: {e}"
+
+        hlo = compiled.as_text()
+        cs = collective_stats(hlo)
+        rec["collectives"] = {
+            "op_bytes": cs.op_bytes, "op_count": cs.op_count,
+            "link_bytes_per_device": cs.link_bytes_per_device,
+        }
+        rec["hlo_lines"] = hlo.count("\n")
+        rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", type=str, default="",
+                    help="comma-separated arch:shape list")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", type=str, default=None)
+    ap.add_argument("--strategy", type=str, default="auto",
+                    choices=["auto", "tp", "dp_zero1", "dp_zero3", "dp_seq"])
+    ap.add_argument("--out", type=str, default="")
+    args = ap.parse_args()
+
+    if args.all:
+        todo = cells()
+    else:
+        todo = [tuple(c.split(":")) for c in args.cells.split(",") if c]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}:{shape}:{'multi' if mp else 'single'}"
+            try:
+                rec = lower_cell(arch, shape, mp, remat=args.remat,
+                                 strategy=args.strategy)
+                print(f"[dryrun] OK   {tag:55s} lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s "
+                      f"flops={rec['flops']:.3e}", flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "multi" if mp else "single", "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"[dryrun] FAIL {tag:55s} {type(e).__name__}: "
+                      f"{str(e)[:200]}", flush=True)
+            results.append(rec)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} records -> {args.out}")
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells compiled")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

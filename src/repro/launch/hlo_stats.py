@@ -1,0 +1,177 @@
+"""Parse collective-communication traffic out of optimized HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but NOT
+collective bytes, so the roofline's third term comes from scanning the
+post-SPMD HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and summing their operand sizes.
+
+CRITICAL ACCOUNTING DETAIL: our models scan over layers, so the collectives
+live inside ``while`` bodies that XLA's static analyses count ONCE. This
+parser builds the computation call graph (ENTRY -> while bodies -> nested
+whiles), extracts each loop's trip count from its condition computation
+(the ``constant(L)`` of the scan bound), and multiplies every collective by
+its loop multiplicity — e.g. a per-layer all-reduce in a 40-layer scan
+counts 40x. The same undercount afflicts cost_analysis() FLOPs, which is
+why the roofline's compute term is analytic (benchmarks/roofline.py) and
+the HLO numbers are a cross-check.
+
+Per-device link traffic uses the standard ring factors with the
+replica-group size parsed from each op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*\S.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls)=%?([\w\.\-]+)|"
+    r"(?:true_computation|false_computation)=%?([\w\.\-]+)|"
+    r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class _Comp:
+    collectives: list            # (opcode, operand_bytes, group_size)
+    whiles: list                 # (cond_name, body_name)
+    calls: list                  # other computation names (x1)
+    max_const: int = 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: dict               # opcode -> operand bytes (loop-scaled)
+    op_count: dict               # opcode -> instruction count (loop-scaled)
+    link_bytes_per_device: float  # ring-model per-device traffic estimate
+    n_whiles: int = 0
+
+    def total_bytes(self) -> float:
+        return float(sum(self.op_bytes.values()))
+
+
+def _parse_computations(hlo_text: str) -> tuple[dict, str]:
+    comps: dict[str, _Comp] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line else None
+        if m and "->" in line:
+            cur = m.group(2)
+            comps[cur] = _Comp([], [], [])
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        comp = comps[cur]
+        for c in _CONST_RE.findall(s):
+            comp.max_const = max(comp.max_const, int(c))
+        mw = _WHILE_RE.search(s)
+        if mw:
+            comp.whiles.append((mw.group(1), mw.group(2)))
+            continue
+        mc = _COLL_RE.search(s)
+        if mc and mc.group("start") != "-done":
+            # operands are printed without inline types in optimized HLO;
+            # use the RESULT shape and per-opcode operand conventions.
+            shapes = _SHAPE_RE.findall(mc.group("out"))
+            ob = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            if mc.group("start") == "-start":
+                ob //= 2          # start-op results carry (operand, result)
+            g = 1
+            mg = _GROUPS_RE.search(s)
+            if mg:
+                g = len(mg.group(1).split(","))
+            else:
+                mg2 = _GROUPS2_RE.search(s)
+                if mg2:
+                    g = int(mg2.group(2))
+            if ob:
+                comp.collectives.append((mc.group("op"), ob, max(g, 2)))
+        for mcall in _CALL_RE.finditer(s):
+            name = mcall.group(1) or mcall.group(2)
+            if name:
+                comp.calls.append(name)
+            elif mcall.group(3):
+                comp.calls.extend(
+                    x.strip().lstrip("%") for x in mcall.group(3).split(","))
+    return comps, entry
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    comps, entry = _parse_computations(hlo_text)
+    op_bytes: dict[str, float] = defaultdict(float)
+    op_count: dict[str, float] = defaultdict(float)
+    link = 0.0
+    n_whiles = 0
+
+    def visit(name: str, mult: float, depth: int):
+        nonlocal link, n_whiles
+        comp = comps.get(name)
+        if comp is None or depth > 12:
+            return
+        for opcode, ob, g in comp.collectives:
+            # ob = RESULT bytes. Ring-model per-device traffic:
+            #   all-reduce:     result == operand,  2*(g-1)/g * bytes
+            #   all-gather:     result = g * shard, (g-1)/g * result
+            #   reduce-scatter: operand = g * result, (g-1)/g * operand
+            #   all-to-all:     (g-1)/g * result
+            #   permute:        result
+            f = (g - 1) / g
+            if opcode == "all-reduce":
+                opnd, traffic = ob, 2 * f * ob
+            elif opcode == "all-gather":
+                opnd, traffic = ob // g, f * ob
+            elif opcode == "reduce-scatter":
+                opnd, traffic = ob * g, f * ob * g
+            elif opcode == "all-to-all":
+                opnd, traffic = ob, f * ob
+            else:
+                opnd, traffic = ob, ob
+            op_bytes[opcode] += mult * opnd
+            op_count[opcode] += mult
+            link += mult * traffic
+        for cond, body in comp.whiles:
+            trip = comps[cond].max_const if cond in comps else 1
+            n_whiles += 1
+            visit(body, mult * trip, depth + 1)
+            visit(cond, mult * trip, depth + 1)
+        for callee in comp.calls:
+            visit(callee, mult, depth + 1)
+
+    if entry:
+        visit(entry, 1.0, 0)
+    else:  # fallback: flat scan, no loop scaling
+        for name in comps:
+            visit(name, 1.0, 11)
+    return CollectiveStats(op_bytes=dict(op_bytes), op_count=dict(op_count),
+                           link_bytes_per_device=link, n_whiles=n_whiles)

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — tests stay on 1 CPU device; only the
+dry-run subprocess sets the 512-device placeholder environment.
+
+Topology: TPU v5e pods of 256 chips. Single pod = (data=16, model=16) —
+"model" maps onto the torus dimension with all-to-all ICI so TP/EP
+collectives stay one hop; "data" rings over the other dimension. Multi-pod
+adds the slowest "pod" axis over DCN: pure data parallelism (gradient
+all-reduce only), the standard hierarchy.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke runs (axes exist, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,61 @@
+"""Multi-host bootstrap for real TPU pods (the non-dry-run path).
+
+On hardware, each host runs this once before building the mesh; the
+placeholder-device dry-run never calls it. Supports both explicit
+coordinator env vars (SLURM/MPI-style clusters) and TPU-pod autodetection
+(GKE/queued resources, where jax.distributed.initialize() needs no args).
+
+Environment (explicit mode):
+  REPRO_COORDINATOR   host:port of process 0
+  REPRO_NUM_PROCESSES total host count
+  REPRO_PROCESS_ID    this host's index
+
+Elastic restarts: the cluster layer requeues a meta-job's remainder after
+a failure; the replacement slice may have a different host count. Restart
+flow = ``initialize()`` on the new slice -> ``make_production_mesh()`` (or
+any slice mesh) -> ``repro.ckpt.restore_checkpoint(..., shardings=...)``
+which device_puts every leaf with the *new* mesh's shardings (elastic
+re-shard), then resume from the restored step.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def initialize(timeout_s: int = 300) -> dict:
+    """Initialize jax.distributed; returns topology facts for logging."""
+    coord = os.environ.get("REPRO_COORDINATOR")
+    if coord:
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=int(os.environ["REPRO_NUM_PROCESSES"]),
+            process_id=int(os.environ["REPRO_PROCESS_ID"]),
+            initialization_timeout=timeout_s)
+    else:
+        # TPU pod autodetection (GKE / queued resources metadata)
+        jax.distributed.initialize()
+    return {
+        "process_id": jax.process_index(),
+        "n_processes": jax.process_count(),
+        "local_devices": jax.local_device_count(),
+        "global_devices": jax.device_count(),
+    }
+
+
+def host_data_shard() -> tuple[int, int]:
+    """(host_id, n_hosts) for the input pipeline — each host generates or
+    reads only its own slice of the global batch (repro.train.data)."""
+    return jax.process_index(), jax.process_count()
+
+
+def assert_mesh_spans_processes(mesh) -> None:
+    """Sanity check: the production mesh must use every addressable device
+    across all hosts (catches mismatched slice bookings)."""
+    want = jax.device_count()
+    got = mesh.devices.size
+    if got != want:
+        raise RuntimeError(
+            f"mesh has {got} devices but the slice exposes {want}; "
+            "slice booking and mesh shape disagree")

@@ -1,0 +1,60 @@
+"""Batched serving driver: prefill + greedy decode of synthetic requests.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
+      --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.launch.mesh import make_host_mesh, mesh_axis_sizes
+from repro.models.layers import unbox
+from repro.models.registry import get_family
+from repro.serve.engine import generate
+from repro.sharding import policy as policy_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh()
+    pol = policy_lib.resolve(cfg, mesh_axis_sizes(mesh), args.batch,
+                             "decode")
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = unbox(fam.init_params(cfg, pol, key))
+    prompts = np.asarray(jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size))
+    embeds = None
+    if cfg.family == "encdec":
+        embeds = jax.random.normal(
+            key, (args.batch, args.prompt_len, cfg.d_model)) * 0.02
+
+    with mesh:
+        t0 = time.time()
+        out = generate(cfg, pol, params, prompts, max_new=args.max_new,
+                       embeds=embeds)
+        dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"[serve] {cfg.name}: generated {out.shape} in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s); sample: {out[0][:8].tolist()}")
+    assert out.shape == (args.batch, args.max_new)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""RecurrentGemma-style hybrid LM: RG-LRU recurrent blocks + local attention.
+
+Griffin architecture (arXiv:2402.19427): residual blocks cycle through
+``cfg.block_pattern`` (("rec","rec","attn") for recurrentgemma — 2 recurrent
+: 1 local-attention). Each block = temporal mixing + gated MLP, pre-norm.
+
+The RG-LRU is a *diagonal* linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t = sigmoid gates,
+computed with ``jax.lax.associative_scan`` for train/prefill (log-depth on
+TPU) or the Pallas chunked-scan kernel (cfg.attention_impl == "pallas"), and
+as a single fused step for decode. Local attention uses a ring KV cache of
+exactly ``cfg.local_window`` slots, so 500k-token decode holds O(window)
+state — this is why this arch runs the ``long_500k`` cell.
+
+Layers scan over pattern *repeats*; the non-multiple tail (26 = 8*3 + 2) is
+unrolled.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding.policy import Policy
+
+LRU_C = 8.0
+
+
+def _pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    return cfg.block_pattern or ("rec", "rec", "attn")
+
+
+def _split(cfg: ModelConfig):
+    pat = _pattern(cfg)
+    reps, tail = divmod(cfg.n_layers, len(pat))
+    return pat, reps, pat[:tail]
+
+
+# ------------------------------------------------------------------ RG-LRU
+
+def rglru_init(key, cfg: ModelConfig):
+    d, dr, dt = cfg.d_model, cfg.d_rnn or cfg.d_model, cfg.pdtype()
+    kx, kg, kr, ki, kl, ko, kc = jax.random.split(key, 7)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(kl, (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / LRU_C))        # softplus^-1
+    return {
+        "ln": L.norm_init(d, dt, cfg.norm_type),
+        "wx": L.dense_init(kx, d, dr, ("embed_fsdp", "rnn"), dt),
+        "wy": L.dense_init(kg, d, dr, ("embed_fsdp", "rnn"), dt),
+        "conv": L.Boxed(jax.random.normal(kc, (cfg.conv_width, dr),
+                                          jnp.float32).astype(dt) * 0.1,
+                        (None, "rnn")),
+        "wr": L.dense_init(kr, dr, dr, ("rnn", None), jnp.float32, scale=0.02),
+        "wi": L.dense_init(ki, dr, dr, ("rnn", None), jnp.float32, scale=0.02),
+        "lam": L.Boxed(lam, ("rnn",)),
+        "wo": L.dense_init(ko, dr, d, ("rnn", "embed_fsdp"), dt),
+    }
+
+
+def _causal_conv(x, kernel, state: Optional[jnp.ndarray] = None):
+    """x: [B, S, C]; kernel: [W, C]. state: [B, W-1, C] tail of prev tokens."""
+    W = kernel.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(W))
+    return out, xp[:, -(W - 1):]
+
+
+def rglru_gates(p, u):
+    """u: [B, S, dr] conv output -> (a, bx) of h = a*h + bx."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wr"])
+    i = jax.nn.sigmoid(uf @ p["wi"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r       # [B, S, dr]
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, bx
+
+
+def lru_scan(a, bx, h0=None):
+    """Diagonal first-order recurrence via associative scan over time."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    return h
+
+
+def rglru_forward(p, cfg: ModelConfig, pol: Policy, x, state=None,
+                  return_state=False):
+    """Griffin recurrent block body. state = (h [B,dr], conv [B,W-1,dr])."""
+    B, S, d = x.shape
+    h = L.apply_norm(p["ln"], x, cfg.norm_eps, cfg.norm_type)
+    u = h @ p["wx"]
+    gate = jax.nn.gelu(h @ p["wy"])
+    u = pol.constrain(u, "batch", "seq", "rnn")
+    h0, conv_st = state if state is not None else (None, None)
+    u, conv_st = _causal_conv(u, p["conv"], conv_st)
+    a, bx = rglru_gates(p, u)
+    if cfg.attention_impl == "pallas" and S > 1:
+        from repro.kernels.rglru_scan.ops import chunked_lru
+        hs = chunked_lru(a, bx, h0)
+    else:
+        hs = lru_scan(a, bx, h0)
+    y = (hs.astype(x.dtype) * gate) @ p["wo"]
+    if return_state:
+        return y, (hs[:, -1], conv_st)
+    return y
+
+
+# ------------------------------------------------------------------ blocks
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    kt, km = jax.random.split(key)
+    p = {"kind_" + kind: L.Boxed(jnp.zeros(()), ()),  # structural marker
+         "ln2": L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type),
+         "mlp": L.mlp_init(km, cfg)}
+    if kind == "rec":
+        p["rec"] = rglru_init(kt, cfg)
+    else:
+        p["ln1"] = L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type)
+        p["attn"] = L.attn_init(kt, cfg)
+    return p
+
+
+def _block_fwd(p, cfg: ModelConfig, pol: Policy, x, positions, kind: str):
+    if kind == "rec":
+        x = x + rglru_forward(p["rec"], cfg, pol, x)
+    else:
+        h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm_type)
+        a, _ = L.attn_forward(p["attn"], cfg, pol, h, positions,
+                              window=cfg.local_window)
+        x = x + a
+    h = L.apply_norm(p["ln2"], x, cfg.norm_eps, cfg.norm_type)
+    x = x + L.mlp_forward(p["mlp"], cfg, pol, h)
+    return pol.constrain(x, "batch", "seq", None)
+
+
+def init_params(cfg: ModelConfig, pol: Policy, key):
+    pat, reps, tail = _split(cfg)
+    ke, kr, kt, kn = jax.random.split(key, 4)
+
+    def superblock(k):
+        sub = jax.random.split(k, len(pat))
+        return {f"b{i}_{t}": _block_init(sub[i], cfg, t)
+                for i, t in enumerate(pat)}
+
+    params = {
+        "embed": L.embed_init(ke, L.padded_vocab(cfg), cfg.d_model,
+                              cfg.pdtype()),
+        "reps": L.stack_layers(jax.vmap(superblock)(
+            jax.random.split(kr, reps))),
+        "norm": L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type),
+    }
+    if tail:
+        tkeys = jax.random.split(kt, len(tail))
+        params["tail"] = {f"t{i}_{t}": _block_init(tkeys[i], cfg, t)
+                          for i, t in enumerate(tail)}
+    return params
+
+
+def forward(cfg: ModelConfig, pol: Policy, params, tokens, embeds=None,
+            positions=None):
+    pat, reps, tail = _split(cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype())
+    x = pol.constrain(x, "batch", "seq", None)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    def body(x, bp):
+        for i, t in enumerate(pat):
+            x = _block_fwd(bp[f"b{i}_{t}"], cfg, pol, x, positions, t)
+        return x, None
+
+    fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, _ = jax.lax.scan(fn, x, params["reps"])
+    for i, t in enumerate(tail):
+        x = _block_fwd(params["tail"][f"t{i}_{t}"], cfg, pol, x, positions, t)
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------------ decode
+
+class HybridCache(NamedTuple):
+    h: jnp.ndarray        # [n_rec, B, dr] RG-LRU states
+    conv: jnp.ndarray     # [n_rec, B, W-1, dr]
+    k: jnp.ndarray        # [n_attn, B, window, KVr, hd] ring caches
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def _counts(cfg: ModelConfig):
+    pat, reps, tail = _split(cfg)
+    seq = list(pat) * reps + list(tail)
+    return seq, sum(1 for t in seq if t == "rec"), \
+        sum(1 for t in seq if t == "attn")
+
+
+def init_cache(cfg: ModelConfig, pol: Policy, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> HybridCache:
+    _, n_rec, n_attn = _counts(cfg)
+    dr = cfg.d_rnn or cfg.d_model
+    W = cfg.conv_width
+    T = min(max_len, cfg.local_window) if cfg.local_window else max_len
+    kvr = cfg.n_kv_heads * pol.kv_repeat
+    return HybridCache(
+        h=jnp.zeros((n_rec, batch, dr), jnp.float32),
+        conv=jnp.zeros((n_rec, batch, W - 1, dr), jnp.float32),
+        k=jnp.zeros((n_attn, batch, T, kvr, cfg.hd), dtype),
+        v=jnp.zeros((n_attn, batch, T, kvr, cfg.hd), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def cache_axes(cfg: ModelConfig) -> HybridCache:
+    return HybridCache(
+        h=("layers", "batch", "rnn"),
+        conv=("layers", "batch", None, "rnn"),
+        k=("layers", "batch", "cache_seq", "kv_heads", None),
+        v=("layers", "batch", "cache_seq", "kv_heads", None),
+        pos=())
+
+
+def decode_step(cfg: ModelConfig, pol: Policy, params, cache: HybridCache,
+                tokens):
+    """One-token decode; O(window + d_rnn) state regardless of position."""
+    seq_kinds, n_rec, n_attn = _counts(cfg)
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype())
+    pos = cache.pos
+    pat, reps, tail = _split(cfg)
+
+    ri = ai = 0
+    nh, nconv, nk, nv = list(cache.h), list(cache.conv), list(cache.k), \
+        list(cache.v)
+
+    def block_params(li):
+        if li < reps * len(pat):
+            r, i = divmod(li, len(pat))
+            t = pat[i]
+            bp = jax.tree.map(lambda a: a[r], params["reps"])
+            return bp[f"b{i}_{t}"], t
+        i = li - reps * len(pat)
+        t = tail[i]
+        return params["tail"][f"t{i}_{t}"], t
+
+    for li in range(cfg.n_layers):
+        p, t = block_params(li)
+        if t == "rec":
+            y, (h1, c1) = rglru_forward(p["rec"], cfg, pol, x,
+                                        state=(cache.h[ri], cache.conv[ri]),
+                                        return_state=True)
+            nh[ri], nconv[ri] = h1, c1
+            ri += 1
+            x = x + y
+        else:
+            h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm_type)
+            a, k1, v1 = L.attn_decode(p["attn"], cfg, pol, h, cache.k[ai],
+                                      cache.v[ai], pos,
+                                      window=cfg.local_window)
+            nk[ai], nv[ai] = k1, v1
+            ai += 1
+            x = x + a
+        hh = L.apply_norm(p["ln2"], x, cfg.norm_eps, cfg.norm_type)
+        x = x + L.mlp_forward(p["mlp"], cfg, pol, hh)
+
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    logits = L.unembed(cfg, pol, x, params["embed"])
+    new = HybridCache(h=jnp.stack(nh), conv=jnp.stack(nconv),
+                      k=jnp.stack(nk), v=jnp.stack(nv), pos=pos + 1)
+    return logits, new

@@ -1,0 +1,347 @@
+"""Shared transformer building blocks (pure JAX, logical-axis annotated).
+
+Parameters are nested dicts of ``Boxed`` leaves — a registered pytree node
+whose child is the array and whose aux data is the tuple of *logical* axis
+names. Because the axes are aux data, boxed trees pass transparently through
+``jax.vmap`` (layer stacking) and ``jax.lax.scan`` (layer loop); ``unbox``
+splits a boxed tree into (params, axes) so train/serve code can derive
+PartitionSpecs from the axes tree (see repro.sharding.partitioning).
+
+All forward functions take a ``Policy`` (repro.sharding.policy) that decides
+how attention shards on the fixed production mesh: head-parallel
+(``tp_heads``, with exact GQA KV-head replication), batch-parallel
+(``dp_batch``, Ulysses-style, for head counts that do not divide TP), or
+unsharded. Softmax attention is computed in query chunks (exact, bounded
+memory) so 32k prefill never materializes an S x S logit matrix.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.policy import Policy
+
+ATTN_CHUNK = 512          # query-chunk length for full-sequence attention
+NEG_INF = -1e30
+
+
+class Boxed:
+    """Array + logical axis names. Pytree node: axes are static aux data."""
+    __slots__ = ("v", "ax")
+
+    def __init__(self, v, ax):
+        self.v = v
+        self.ax = tuple(ax)
+
+    def __repr__(self):
+        return f"Boxed({getattr(self.v, 'shape', self.v)}, ax={self.ax})"
+
+
+jax.tree_util.register_pytree_node(
+    Boxed, lambda b: ((b.v,), b.ax), lambda ax, ch: Boxed(ch[0], ax))
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    params = jax.tree.map(lambda b: b.v, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.ax, tree, is_leaf=is_boxed)
+    return params, axes
+
+
+def box_tree(params, axes):
+    """Inverse of unbox."""
+    return jax.tree.map(
+        lambda v, ax: Boxed(v, ax), params, axes,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def stack_layers(tree):
+    """Prepend the 'layers' logical axis to every leaf of a vmapped init."""
+    return jax.tree.map(lambda b: Boxed(b.v, ("layers",) + b.ax), tree,
+                        is_leaf=is_boxed)
+
+
+def dense_init(key, in_dim, out_dim, axes, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return Boxed(w.astype(dtype), axes)
+
+
+def embed_init(key, vocab, dim, dtype):
+    w = jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+    return Boxed(w.astype(dtype), ("vocab", "embed"))
+
+
+def norm_init(dim, dtype, norm_type="rmsnorm"):
+    p = {"scale": Boxed(jnp.ones((dim,), dtype), ("embed",))}
+    if norm_type == "layernorm":
+        p["bias"] = Boxed(jnp.zeros((dim,), dtype), ("embed",))
+    return p
+
+
+def apply_norm(p, x, eps, norm_type="rmsnorm"):
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    hd = cfg.hd
+    d = d_model or cfg.d_model
+    dt = cfg.pdtype()
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, ("embed_fsdp", "heads"), dt),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, ("embed_fsdp", "kv_heads"), dt),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, ("embed_fsdp", "kv_heads"), dt),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, ("heads", "embed_fsdp"), dt),
+    }
+
+
+def _repeat_kv(k, repeat: int):
+    """Exact GQA KV replication: kv head j -> repeat copies, so that query
+    head i (group g = H/KV') still reads its own key/value."""
+    if repeat == 1:
+        return k
+    B, T, KV, hd = k.shape
+    return jnp.repeat(k, repeat, axis=2)
+
+
+def _chunked_sdpa(q, k, v, *, causal: bool, window: int, offset: int,
+                  softcap: float = 0.0, chunk: int = ATTN_CHUNK):
+    """Exact softmax attention computed in query chunks.
+
+    q: [B, S, H, hd]; k, v: [B, T, KV, hd] with H % KV == 0. The full
+    [S, T] logit matrix is never materialized — each chunk computes
+    [B, KV, g, chunk, T] logits, softmaxes over T exactly, and contracts.
+    ``offset`` is the absolute position of q[0] minus that of k[0].
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, S)
+    n_chunks = math.ceil(S / chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(B, n_chunks, chunk, KV, g, hd)
+    ki = jnp.arange(T)
+
+    def one(ci, qi):
+        # qi: [B, chunk, KV, g, hd]
+        logits = jnp.einsum("bskgh,btkh->bkgst", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        pos_q = ci * chunk + jnp.arange(chunk) + offset       # [chunk]
+        mask = jnp.ones((chunk, T), bool)
+        if causal:
+            mask &= ki[None, :] <= pos_q[:, None]
+        if window > 0:
+            mask &= ki[None, :] > pos_q[:, None] - window
+        logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+
+    if n_chunks == 1:
+        out = one(0, qc[:, 0])[:, None]
+    else:
+        out = jax.lax.map(lambda args: one(*args),
+                          (jnp.arange(n_chunks), qc.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)                 # [B, n_chunks, chunk, KV, g, hd]
+    out = out.reshape(B, n_chunks * chunk, H, hd)
+    return out[:, :S]
+
+
+def attn_forward(p, cfg: ModelConfig, pol: Policy, x, positions,
+                 window: int = 0, causal: bool = True):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v)).
+
+    The returned k, v have KV heads already replicated per the policy, ready
+    to seed a decode cache.
+    """
+    B, S, d = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, pol.kv_repeat)
+    v = _repeat_kv(v, pol.kv_repeat)
+    q = pol.constrain(q, "attn_batch", "seq", "heads", None)
+    # K/V use the "kv_seq" axis: under dp_seq ("seq" sharded over model)
+    # it stays replicated, so XLA inserts one K/V all-gather per layer and
+    # each rank attends its query shard against the full keys (exact).
+    k = pol.constrain(k, "attn_batch", "kv_seq", "kv_heads", None)
+    v = pol.constrain(v, "attn_batch", "kv_seq", "kv_heads", None)
+    seq_sharded = pol.rules.get("seq") is not None
+    if cfg.attention_impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.logit_softcap)
+    else:
+        # q-chunking would reshape the sharded seq axis; disable under dp_seq
+        out = _chunked_sdpa(q, k, v, causal=causal, window=window, offset=0,
+                            softcap=cfg.logit_softcap,
+                            chunk=S if seq_sharded else ATTN_CHUNK)
+    out = pol.constrain(out, "attn_batch", "seq", "heads", None)
+    y = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return y, (k, v)
+
+
+def cross_attn_forward(p, cfg: ModelConfig, pol: Policy, x, memory):
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    B, S, d = x.shape
+    hd = cfg.hd
+    Tm = memory.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (memory @ p["wk"]).reshape(B, Tm, cfg.n_kv_heads, hd)
+    v = (memory @ p["wv"]).reshape(B, Tm, cfg.n_kv_heads, hd)
+    k = _repeat_kv(k, pol.kv_repeat)
+    v = _repeat_kv(v, pol.kv_repeat)
+    q = pol.constrain(q, "attn_batch", "seq", "heads", None)
+    out = _chunked_sdpa(q, k, v, causal=False, window=0, offset=0)
+    y = out.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+    return y, (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, pol: Policy, x, cache_k, cache_v, pos,
+                window: int = 0):
+    """One-token decode step.
+
+    x: [B, 1, d]; cache_[kv]: [B, T, KVr, hd] (KV heads pre-replicated);
+    pos: [] or [B] absolute position of the new token. With a ring cache
+    (window > 0 and T == window) the write index is pos % T.
+    Returns (out [B, 1, d], new_cache_k, new_cache_v).
+    """
+    B, _, d = x.shape
+    hd = cfg.hd
+    T = cache_k.shape[1]
+    KVr = cache_k.shape[2]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+    posb = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, posb[:, None], cfg.rope_theta)
+        k = apply_rope(k, posb[:, None], cfg.rope_theta)
+    k = _repeat_kv(k, pol.kv_repeat)
+    v = _repeat_kv(v, pol.kv_repeat)
+
+    ring = window > 0 and T == window
+    slot = posb % T if ring else posb
+    oh = jax.nn.one_hot(slot, T, dtype=jnp.float32)     # [B, T]
+    upd = lambda c, new: (c * (1 - oh[:, :, None, None]).astype(c.dtype)
+                          + oh[:, :, None, None].astype(c.dtype)
+                          * new.astype(c.dtype))
+    cache_k = upd(cache_k, k)
+    cache_v = upd(cache_v, v)
+    cache_k = pol.constrain(cache_k, "batch", "cache_seq", "kv_heads", None)
+    cache_v = pol.constrain(cache_v, "batch", "cache_seq", "kv_heads", None)
+
+    ki = jnp.arange(T)[None, :]
+    if ring:
+        # slot i holds absolute position: valid iff within the last `window`
+        age = (slot[:, None] - ki) % T
+        valid = age <= jnp.minimum(posb[:, None], T - 1)
+    else:
+        valid = ki <= posb[:, None]
+        if window > 0:
+            valid &= ki > posb[:, None] - window
+
+    g = cfg.n_heads // KVr
+    qg = q.reshape(B, 1, KVr, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        cache_k.astype(x.dtype),
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(x.dtype),
+                     cache_v.astype(x.dtype)).reshape(B, 1, cfg.n_heads * hd)
+    y = out @ p["wo"]
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             d_model: Optional[int] = None):
+    d, dt = d_model or cfg.d_model, cfg.pdtype()
+    d_ff = d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"wi": dense_init(k1, d, d_ff, ("embed_fsdp", "mlp"), dt),
+                "wg": dense_init(k2, d, d_ff, ("embed_fsdp", "mlp"), dt),
+                "wo": dense_init(k3, d_ff, d, ("mlp", "embed_fsdp"), dt)}
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d, d_ff, ("embed_fsdp", "mlp"), dt),
+            "wo": dense_init(k2, d_ff, d, ("mlp", "embed_fsdp"), dt)}
+
+
+def mlp_forward(p, cfg: ModelConfig, pol: Policy, x):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    h = pol.constrain(h, "batch", "seq", "mlp")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------- head
+
+def unembed(cfg: ModelConfig, pol: Policy, x, embed_w, head_w=None):
+    """Project to (padded) vocab logits; padded entries masked to -inf."""
+    w = embed_w.T if head_w is None else head_w
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    pad = logits.shape[-1] - cfg.vocab_size
+    if pad > 0:
+        mask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+        logits = jnp.where(mask, logits, NEG_INF)
+    return pol.constrain(logits, "batch", "seq", "vocab")
+
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 16) -> int:
+    return int(math.ceil(cfg.vocab_size / multiple) * multiple)

@@ -1,0 +1,211 @@
+"""Decoder-only LM covering the dense and MoE families.
+
+Covers: yi-6b, phi3-medium-14b, granite-3-2b, starcoder2-7b (dense GQA),
+qwen2-moe-a2.7b, arctic-480b (MoE; shared-expert / dense-residual parallel
+branch), and pixtral-12b (decoder backbone whose first ``n_prefix`` positions
+are fed precomputed patch embeddings from the stubbed vision frontend).
+
+Layers are stacked with vmap and iterated with ``lax.scan`` so the compiled
+HLO is depth-independent; remat policy is applied to the scanned body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.sharding.policy import Policy
+
+
+class DecodeCache(NamedTuple):
+    k: jnp.ndarray        # [Lyr, B, T, KVr, hd]
+    v: jnp.ndarray        # [Lyr, B, T, KVr, hd]
+    pos: jnp.ndarray      # [] next absolute position
+
+
+def _layer_init(key, cfg: ModelConfig, pol: Policy):
+    ka, km, kp = jax.random.split(key, 3)
+    p = {
+        "ln1": L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type),
+        "attn": L.attn_init(ka, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_lib.moe_init(km, cfg, pol)
+        par_ff = cfg.shared_expert_d_ff or (cfg.d_ff if cfg.dense_residual
+                                            else 0)
+        if par_ff:
+            p["mlp"] = L.mlp_init(kp, cfg, d_ff=par_ff)
+    else:
+        p["mlp"] = L.mlp_init(km, cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, pol: Policy, key):
+    ke, kl, kn = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg, pol))(lkeys)
+    return {
+        "embed": L.embed_init(ke, L.padded_vocab(cfg), cfg.d_model,
+                              cfg.pdtype()),
+        "layers": L.stack_layers(stacked),
+        "norm": L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type),
+    }
+
+
+def _block(cfg: ModelConfig, pol: Policy, p, x, positions):
+    """One pre-norm transformer block. Returns (x, aux_loss)."""
+    h = L.apply_norm(p["ln1"], x, cfg.norm_eps, cfg.norm_type)
+    a, _ = L.attn_forward(p["attn"], cfg, pol, h, positions,
+                          window=cfg.local_window)
+    x = x + a
+    h = L.apply_norm(p["ln2"], x, cfg.norm_eps, cfg.norm_type)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        mo, aux = moe_lib.moe_forward(p["moe"], cfg, pol, h, impl=cfg.moe_impl)
+        if "mlp" in p:
+            par_ff = cfg.shared_expert_d_ff or cfg.d_ff
+            mo = mo + L.mlp_forward(p["mlp"], cfg.with_(d_ff=par_ff), pol, h)
+        x = x + mo
+    else:
+        x = x + L.mlp_forward(p["mlp"], cfg, pol, h)
+    return pol.constrain(x, "batch", "seq", None), aux
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def embed_tokens(cfg: ModelConfig, pol: Policy, params, tokens,
+                 embeds: Optional[jnp.ndarray] = None):
+    """Token embedding; for VLM backbones the first embeds.shape[1] positions
+    come from the (stubbed) modality frontend instead of the table."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if embeds is not None:
+        n = embeds.shape[1]
+        x = jnp.concatenate([embeds.astype(x.dtype), x[:, n:]], axis=1)
+    return pol.constrain(x.astype(cfg.cdtype()), "batch", "seq", None)
+
+
+def forward(cfg: ModelConfig, pol: Policy, params, tokens,
+            embeds: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None):
+    """Full-sequence forward (train / prefill).
+
+    Returns (hidden [B,S,d] post-final-norm, aux_loss). Logits are computed
+    by the caller (chunked loss / last-position-only prefill) so a full
+    [B, S, vocab] tensor is never materialized for 100k+ vocabularies.
+    """
+    B, S = tokens.shape
+    x = embed_tokens(cfg, pol, params, tokens, embeds)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _block(cfg, pol, lp, x, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_remat(cfg, body),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    return x, aux * cfg.router_aux_loss / max(cfg.n_layers, 1)
+
+
+def prefill(cfg: ModelConfig, pol: Policy, params, tokens, max_len: int,
+            embeds: Optional[jnp.ndarray] = None,
+            cache_dtype=jnp.bfloat16):
+    """Forward over the prompt, returning (hidden, seeded DecodeCache).
+
+    The per-layer K/V produced by the forward scan seed a cache of length
+    ``max_len`` (ring-truncated to the local window if the arch has one).
+    """
+    B, S = tokens.shape
+    x = embed_tokens(cfg, pol, params, tokens, embeds)
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm_eps, cfg.norm_type)
+        a, (k, v) = L.attn_forward(lp["attn"], cfg, pol, h, positions,
+                                   window=cfg.local_window)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg.norm_eps, cfg.norm_type)
+        if cfg.n_experts:
+            mo, _ = moe_lib.moe_forward(lp["moe"], cfg, pol, h, impl=cfg.moe_impl)
+            if "mlp" in lp:
+                mo = mo + L.mlp_forward(lp["mlp"], cfg, pol, h)
+            x = x + mo
+        else:
+            x = x + L.mlp_forward(lp["mlp"], cfg, pol, h)
+        return x, (k.astype(cache_dtype), v.astype(cache_dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    cache = init_cache(cfg, pol, B, max_len, cache_dtype)
+    T = cache.k.shape[2]
+    take = min(S, T)
+    # write the last `take` prompt positions; ring layout if windowed
+    if cfg.local_window and T == cfg.local_window:
+        idx = (jnp.arange(S - take, S)) % T
+        k0 = cache.k.at[:, :, idx].set(ks[:, :, S - take:])
+        v0 = cache.v.at[:, :, idx].set(vs[:, :, S - take:])
+    else:
+        k0 = cache.k.at[:, :, :take].set(ks[:, :, S - take:])
+        v0 = cache.v.at[:, :, :take].set(vs[:, :, S - take:])
+    return x, DecodeCache(k=k0, v=v0, pos=jnp.asarray(S, jnp.int32))
+
+
+def init_cache(cfg: ModelConfig, pol: Policy, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> DecodeCache:
+    kvr = cfg.n_kv_heads * pol.kv_repeat
+    T = min(max_len, cfg.local_window) if cfg.local_window else max_len
+    shape = (cfg.n_layers, batch, T, kvr, cfg.hd)
+    return DecodeCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def cache_axes(cfg: ModelConfig) -> DecodeCache:
+    ax = ("layers", "batch", "cache_seq", "kv_heads", None)
+    return DecodeCache(k=ax, v=ax, pos=())
+
+
+def decode_step(cfg: ModelConfig, pol: Policy, params, cache: DecodeCache,
+                tokens):
+    """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], new cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(cfg, pol, params, tokens)
+    pos = cache.pos
+
+    def body(x, lp_kv):
+        lp, ck, cv = lp_kv
+        h = L.apply_norm(lp["ln1"], x, cfg.norm_eps, cfg.norm_type)
+        a, ck, cv = L.attn_decode(lp["attn"], cfg, pol, h, ck, cv, pos,
+                                  window=cfg.local_window)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg.norm_eps, cfg.norm_type)
+        if cfg.n_experts:
+            mo, _ = moe_lib.moe_forward(lp["moe"], cfg, pol, h, impl=cfg.moe_impl)
+            if "mlp" in lp:
+                par_ff = cfg.shared_expert_d_ff or cfg.d_ff
+                mo = mo + L.mlp_forward(lp["mlp"], cfg.with_(d_ff=par_ff),
+                                        pol, h)
+            x = x + mo
+        else:
+            x = x + L.mlp_forward(lp["mlp"], cfg, pol, h)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    logits = L.unembed(cfg, pol, x, params["embed"])
+    return logits, DecodeCache(k=nk, v=nv, pos=cache.pos + 1)

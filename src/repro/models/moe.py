@@ -1,0 +1,172 @@
+"""Mixture-of-Experts layer: sort/gather dispatch (default) + GShard einsum.
+
+Routed experts are sharded over the mesh "model" axis (expert parallelism).
+Expert counts that do not divide the EP degree are *padded* with dead experts
+whose router logits are masked to -inf (policy.expert_pad; exact — dead
+experts receive no tokens and contribute no output).
+
+Two dispatch implementations, selectable by ``impl``:
+
+  * ``gather`` (default; §Perf iteration 2) — sort-based: token choices are
+    ranked per expert with a stable argsort, scattered into a capacity-
+    padded ``[E, C, d]`` buffer, run through the expert matmuls, and
+    gathered back. Memory and FLOPs are LINEAR in tokens (no [.., E, C]
+    one-hot tensor), which is what makes arctic-480b (E=128) feasible:
+    the einsum dispatch at S=4096 costs ~20x the expert matmuls themselves.
+  * ``einsum`` — the classic GShard one-hot formulation (kept as the
+    reference and for the §Perf before/after measurement). Each batch row
+    is a routing group; C = ceil(S * k / E * cf).
+
+Both drop over-capacity tokens (combine weight 0; the residual path carries
+them), as in Switch/GShard.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Boxed, dense_init
+from repro.sharding.policy import Policy
+
+
+def moe_init(key, cfg: ModelConfig, pol: Policy):
+    """Router + stacked expert SwiGLU weights. E = padded expert count."""
+    E = pol.expert_pad or cfg.n_experts
+    d, f, dt = cfg.d_model, cfg.expert_d_ff, cfg.pdtype()
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+
+    def ex(k, shape, axes):
+        w = jax.random.normal(k, shape, jnp.float32) * s
+        return Boxed(w.astype(dt), axes)
+
+    return {
+        "router": dense_init(kr, d, E, ("embed", "expert"), jnp.float32,
+                             scale=0.02),
+        "wi": ex(ki, (E, d, f), ("expert", "embed_fsdp", None)),
+        "wg": ex(kg, (E, d, f), ("expert", "embed_fsdp", None)),
+        "wo": ex(ko, (E, f, d), ("expert", None, "embed_fsdp")),
+    }
+
+
+def capacity(S: int, top_k: int, E: int, cf: float) -> int:
+    return max(1, int(math.ceil(S * top_k / E * cf)))
+
+
+def _route(p, cfg: ModelConfig, x):
+    """Router: returns (gate [B,S,k], idx [B,S,k], probs [B,S,E])."""
+    E = p["router"].shape[-1]
+    k = cfg.experts_per_token
+    logits = x.astype(jnp.float32) @ p["router"]          # [B, S, E]
+    if E > cfg.n_experts:                                  # mask padded experts
+        live = jnp.arange(E) < cfg.n_experts
+        logits = jnp.where(live, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                    # [B, S, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return gate, idx, probs
+
+
+def _aux_loss(cfg: ModelConfig, idx, probs, E: int):
+    """Switch-style load-balance loss: E * sum_e fraction_e * mean_prob_e."""
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)         # [B, S, k, E]
+    frac = oh.sum(2).reshape(-1, E).mean(0)
+    mean_p = probs.reshape(-1, E).mean(0)
+    return cfg.n_experts * jnp.sum(frac * mean_p)
+
+
+def moe_forward(p, cfg: ModelConfig, pol: Policy, x, impl: str = "auto"):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    if impl == "auto":
+        # experts sharded over "model" (EP): the einsum formulation lets
+        # SPMD route dispatch/combine as all-to-alls; under pure-DP the
+        # gather path is batch-local and strictly cheaper.
+        impl = "einsum" if pol.rules.get("expert") is not None else "gather"
+    if impl == "gather":
+        return moe_forward_gather(p, cfg, pol, x)
+    return moe_forward_einsum(p, cfg, pol, x)
+
+
+def moe_forward_gather(p, cfg: ModelConfig, pol: Policy, x):
+    """Sort-based dispatch: linear memory/FLOPs in tokens.
+
+    Routing groups are *batch rows* (same as the einsum path) and the
+    rank/scatter/gather sequence is vmapped over the batch axis, so the
+    whole dispatch stays local to each batch shard — no global prefix sums
+    or cross-shard scatters (a global capacity pool measured 5-10x the
+    collective traffic under TP; see EXPERIMENTS.md §Perf iteration 3).
+    Each choice is ranked within its expert by cumulative count over the
+    flattened (s, k) order, scattered into an [E, C, d] capacity buffer,
+    transformed, and combined back with its gate.
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    k = cfg.experts_per_token
+    C = capacity(S, k, E, cfg.capacity_factor)
+    dt = x.dtype
+    gate, idx, probs = _route(p, cfg, x)
+
+    def row(xr, idr, gater):
+        # xr: [S, d]; idr/gater: [S, k]
+        eid = idr.reshape(S * k)
+        oh = jax.nn.one_hot(eid, E, dtype=jnp.int32)       # [S*k, E]
+        rank = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - oh,
+                                   eid[:, None], axis=1)[:, 0]
+        keep = rank < C
+        slot = jnp.where(keep, eid * C + rank, E * C)      # E*C = drop bin
+        buf = jnp.zeros((E * C + 1, d), dt).at[slot].set(
+            xr[jnp.arange(S * k) // k], mode="drop")
+        return buf[:E * C].reshape(E, C, d), slot, keep
+
+    xin, slot, keep = jax.vmap(row)(x, idx, gate)          # [B, E, C, d]
+    xin = pol.constrain(xin, "batch", "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, p["wg"].astype(dt))) \
+        * jnp.einsum("becd,edf->becf", xin, p["wi"].astype(dt))
+    eo = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))
+    eo = pol.constrain(eo, "batch", "expert", None, None)
+
+    def combine(eor, slotr, gater, keepr):
+        flat = jnp.concatenate([eor.reshape(E * C, d),
+                                jnp.zeros((1, d), dt)], axis=0)
+        w = (gater.reshape(S * k) * keepr).astype(dt)
+        return (flat[slotr] * w[:, None]).reshape(S, k, d).sum(1)
+
+    out = jax.vmap(combine)(eo, slot, gate.astype(jnp.float32), keep)
+    return out, _aux_loss(cfg, idx, probs, E)
+
+
+def moe_forward_einsum(p, cfg: ModelConfig, pol: Policy, x):
+    """GShard one-hot dispatch (reference / §Perf baseline)."""
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    k = cfg.experts_per_token
+    C = capacity(S, k, E, cfg.capacity_factor)
+    dt = x.dtype
+    gate, idx, probs = _route(p, cfg, x)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)         # [B, S, k, E]
+    flat = oh.reshape(B, S * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                  # [B, S*k, E]
+    keep = (pos < C).astype(jnp.float32) * flat
+    slot = jax.nn.one_hot((pos * flat).sum(-1).astype(jnp.int32), C,
+                          dtype=jnp.float32)               # [B, S*k, C]
+    # combine[b, s, e, c] = sum_k gate * keep * slot
+    gk = (gate.reshape(B, S * k, 1) * keep)                # [B, S*k, E]
+    combine = jnp.einsum("bte,btc->btec", gk, slot).reshape(B, S, k, E, C) \
+        .sum(2)                                            # [B, S, E, C]
+    combine = pol.constrain(combine, "batch", "seq", "expert", None)
+    dispatch = (combine > 0).astype(dt)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)        # [E, B, C, d]
+    xin = pol.constrain(xin, "expert", "batch", None, None)
+    h = jax.nn.silu(jnp.einsum("ebcd,edf->ebcf", xin, p["wg"].astype(dt))) \
+        * jnp.einsum("ebcd,edf->ebcf", xin, p["wi"].astype(dt))
+    eo = jnp.einsum("ebcf,efd->ebcd", h, p["wo"].astype(dt))
+    eo = pol.constrain(eo, "expert", "batch", None, None)
+    out = jnp.einsum("bsec,ebcd->bsd", combine.astype(dt), eo)
+    return out, _aux_loss(cfg, idx, probs, E)

@@ -1,0 +1,43 @@
+"""Uniform model API over the five families.
+
+Every family exposes:
+  init_params(cfg, pol, key)              -> boxed param tree
+  forward(cfg, pol, params, tokens, embeds=None) -> (hidden [B,S,d], aux)
+  init_cache(cfg, pol, batch, max_len)    -> decode-state pytree
+  cache_axes(cfg)                         -> matching logical-axis pytree
+  decode_step(cfg, pol, params, cache, tokens) -> (logits [B,1,V], cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.models import encdec, hybrid, lm, xlstm
+from repro.models.config import ModelConfig
+
+
+class Family(NamedTuple):
+    init_params: Callable
+    forward: Callable
+    init_cache: Callable
+    cache_axes: Callable
+    decode_step: Callable
+
+
+_LM = Family(lm.init_params, lm.forward, lm.init_cache, lm.cache_axes,
+             lm.decode_step)
+
+FAMILIES: dict[str, Family] = {
+    "dense": _LM,
+    "moe": _LM,
+    "vlm": _LM,
+    "ssm": Family(xlstm.init_params, xlstm.forward, xlstm.init_cache,
+                  xlstm.cache_axes, xlstm.decode_step),
+    "hybrid": Family(hybrid.init_params, hybrid.forward, hybrid.init_cache,
+                     hybrid.cache_axes, hybrid.decode_step),
+    "encdec": Family(encdec.init_params, encdec.forward, encdec.init_cache,
+                     encdec.cache_axes, encdec.decode_step),
+}
+
+
+def get_family(cfg: ModelConfig) -> Family:
+    return FAMILIES[cfg.family]

@@ -1,0 +1,422 @@
+"""xLSTM language model (mLSTM + sLSTM blocks) — attention-free [ssm].
+
+Faithful to the xLSTM block structure (arXiv:2405.04517): the model is a
+stack of pre-norm residual blocks following ``cfg.xlstm_pattern`` (e.g. 7
+mLSTM : 1 sLSTM). Because mLSTM and sLSTM blocks have different parameter
+shapes, the layer scan runs over *pattern repeats* (one superblock = one
+pattern period), keeping compiled HLO size O(pattern), not O(depth).
+
+mLSTM: matrix-memory cell C_t = f_t C_{t-1} + i_t v_t k_t^T with per-head
+scalar gates, computed in the **chunkwise-parallel form**: within a chunk the
+output is an attention-like einsum with decay matrix A_ts = i_s exp(F_t-F_s)
+(F = cumsum log f), between chunks a small lax.scan carries (C, n). This is
+the TPU-native adaptation: the sequential scan becomes MXU matmuls.
+Numerics: we use sigmoid input/forget gates (log-space decay accumulation,
+always stable in f32) instead of the paper's exp-gate + running max
+stabilizer; DESIGN.md records this simplification.
+
+sLSTM: scalar-memory cell with exponential gating (running-max stabilized,
+as in the paper) and block-diagonal hidden-to-hidden recurrence — truly
+sequential, implemented as lax.scan over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding.policy import Policy
+
+PROJ_FACTOR = 2          # mLSTM up-projection factor
+SLSTM_FF = 4 / 3         # sLSTM post-MLP factor (GeGLU)
+
+
+def _slstm_ff(d: int) -> int:
+    """4/3 * d rounded up to 128 so the TP axis (16) always divides it."""
+    return ((int(SLSTM_FF * d) + 127) // 128) * 128
+
+
+def _pattern(cfg: ModelConfig) -> tuple[str, ...]:
+    pat = cfg.xlstm_pattern or ("m",)
+    assert cfg.n_layers % len(pat) == 0, (cfg.n_layers, pat)
+    return pat
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def _mlstm_dims(cfg: ModelConfig):
+    di = PROJ_FACTOR * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def mlstm_block_init(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.pdtype()
+    di, H, dh = _mlstm_dims(cfg)
+    ku, kc, kq, kk, kv, kg, ko = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(dh)
+
+    def bd(k, axes):  # block-diagonal per-head projection [H, dh, dh]
+        w = jax.random.normal(k, (H, dh, dh), jnp.float32) * s
+        return L.Boxed(w.astype(dt), axes)
+
+    return {
+        "ln": L.norm_init(d, dt, cfg.norm_type),
+        "w_up": L.dense_init(ku, d, 2 * di, ("embed_fsdp", "rnn"), dt),
+        "conv": L.Boxed(jax.random.normal(kc, (cfg.conv_width, di),
+                                          jnp.float32).astype(dt) * 0.1,
+                        (None, "rnn")),
+        # q/k contract the sharded conv features (psum, replicated out);
+        # v shards its *output* dim so the matrix state C and the block
+        # output stay model-sharded end to end.
+        "wq": bd(kq, (None, "rnn", None)), "wk": bd(kk, (None, "rnn", None)),
+        "wv": bd(kv, (None, None, "rnn")),
+        "w_gate": L.dense_init(kg, di, 2 * H, ("rnn", None), jnp.float32),
+        "gate_bias": L.Boxed(jnp.array([1.0, -1.0] * H, jnp.float32)
+                             .reshape(2 * H), (None,)),
+        "gn": L.norm_init(di, dt, "rmsnorm"),
+        "w_down": L.dense_init(ko, di, d, ("rnn", "embed_fsdp"), dt),
+    }
+
+
+def _causal_conv(x, kernel, state=None):
+    """x: [B, S, C]; kernel: [W, C] depthwise causal conv.
+    state: [B, W-1, C] trailing inputs of the previous call (decode)."""
+    W = kernel.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(W))
+    return out, xp[:, -(W - 1):]
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray     # [B, H, dk, dv]
+    n: jnp.ndarray     # [B, H, dk]
+
+
+def mlstm_scan(q, k, v, logf, logi, state: MLSTMState, chunk: int,
+               pol=None):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: [B, S, H, dh]; logf, logi: [B, S, H] (<= 0).
+    Returns (out [B,S,H,dh], final state).
+    """
+    B, S, H, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(chunk, S)
+    S0 = S
+    pad = (-S) % chunk
+    if pad:
+        # pad with identity steps: f=1 (logf=0) carries state, i=0 (logi=-inf)
+        # contributes nothing, so the final state is exact.
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = zp(q), zp(k), zp(v)
+        logf = zp(logf)
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)
+        S = S + pad
+    nc = S // chunk
+    r = lambda x: x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+    qs, ks, vs, lfs, lis = map(r, (q, k, v, logf, logi))
+
+    def step(st: MLSTMState, xs):
+        qc, kc, vc, lf, li = xs          # [B, chunk, H, ...]
+        F = jnp.cumsum(lf, axis=1)                       # [B, c, H]
+        # intra-chunk decay matrix A[t, s] = exp(F_t - F_s + li_s), s <= t
+        ti = jnp.arange(chunk)
+        causal = ti[:, None] >= ti[None, :]
+        logA = (F[:, :, None] - F[:, None, :] + li[:, None, :])  # [B,t,s,H]
+        A = jnp.where(causal[None, :, :, None], jnp.exp(logA), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * scale * A
+        num = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        # inter-chunk contribution from carried state
+        decay = jnp.exp(F)                               # [B, c, H]
+        qCin = jnp.einsum("bthd,bhde->bthe", qc, st.C) * scale
+        num = num + decay[..., None] * qCin
+        nvec = jnp.einsum("btsh,bshd->bthd", scores / scale, kc) \
+            + decay[..., None] * st.n[:, None]
+        denom = jnp.abs(jnp.einsum("bthd,bthd->bth", qc, nvec)) * scale
+        out = num / jnp.maximum(denom, 1.0)[..., None]
+        # state update to chunk end
+        dAll = jnp.exp(F[:, -1])                         # [B, H]
+        w = jnp.exp(F[:, -1][:, None] - F + li)          # [B, c, H]
+        C1 = dAll[:, :, None, None] * st.C + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w, kc, vc)
+        n1 = dAll[:, :, None] * st.n + jnp.einsum("bsh,bshd->bhd", w, kc)
+        if pol is not None:   # pin carry sharding (see slstm_seq note)
+            C1 = pol.constrain(C1, "batch", None, None, "rnn")
+            n1 = pol.constrain(n1, "batch", None, None)
+        return MLSTMState(C1, n1), out
+
+    state, outs = jax.lax.scan(step, state, (qs, ks, vs, lfs, lis))
+    return outs.swapaxes(0, 1).reshape(B, S, H, dh)[:, :S0], state
+
+
+def mlstm_forward(p, cfg: ModelConfig, pol: Policy, x, state=None,
+                  return_state=False):
+    """x: [B, S, d]. Chunked mLSTM block body (everything but residual)."""
+    B, S, d = x.shape
+    di, H, dh = _mlstm_dims(cfg)
+    h = L.apply_norm(p["ln"], x, cfg.norm_eps, cfg.norm_type)
+    up = h @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)                    # [B, S, di] each
+    u = pol.constrain(u, "batch", "seq", "rnn")
+    cell_state, conv_state = state if state is not None else (None, None)
+    cv, conv_state = _causal_conv(u, p["conv"], conv_state)
+    c = jax.nn.silu(cv)
+    cH = c.reshape(B, S, H, dh)
+    uH = u.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", cH, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", cH, p["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", uH, p["wv"])
+    v = pol.constrain(v, "batch", "seq", None, "rnn")
+    gates = c.astype(jnp.float32) @ p["w_gate"] + p["gate_bias"]
+    logf = jax.nn.log_sigmoid(gates[..., :H])
+    logi = jax.nn.log_sigmoid(gates[..., H:])
+    if cell_state is None:
+        # constrain the scan carry: without this SPMD may choose to
+        # replicate the state and all-reduce every chunk step
+        cell_state = MLSTMState(
+            C=pol.constrain(jnp.zeros((B, H, dh, dh), jnp.float32),
+                            "batch", None, None, "rnn"),
+            n=pol.constrain(jnp.zeros((B, H, dh), jnp.float32),
+                            "batch", None, None))
+    out, cell_state = mlstm_scan(q.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32), logf, logi,
+                                 cell_state, cfg.mlstm_chunk, pol=pol)
+    out = out.reshape(B, S, di).astype(x.dtype)
+    out = L.apply_norm(p["gn"], out, cfg.norm_eps, "rmsnorm")
+    y = (out * jax.nn.silu(z)) @ p["w_down"]
+    return (y, (cell_state, conv_state)) if return_state else y
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def slstm_block_init(key, cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.pdtype()
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    ff = _slstm_ff(d)
+
+    def wmat(k):
+        w = jax.random.normal(k, (d, 4 * d), jnp.float32) * s
+        return L.Boxed(w.astype(dt), ("embed_fsdp", "rnn"))
+
+    def rmat(k):  # block-diagonal recurrence [H, dh, 4*dh]
+        w = jax.random.normal(k, (H, dh, 4 * dh), jnp.float32) / math.sqrt(dh)
+        return L.Boxed(w.astype(dt), (None, None, "rnn"))
+
+    return {
+        "ln": L.norm_init(d, dt, cfg.norm_type),
+        "w": wmat(ks[0]),
+        "r": rmat(ks[1]),
+        "bias": L.Boxed(jnp.zeros((4 * d,), jnp.float32), (None,)),
+        "gn": L.norm_init(d, dt, "rmsnorm"),
+        "up": L.dense_init(ks[2], d, 2 * ff, ("embed_fsdp", "mlp"), dt),
+        "down": L.dense_init(ks[3], ff, d, ("mlp", "embed_fsdp"), dt),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jnp.ndarray     # [B, d]
+    c: jnp.ndarray     # [B, d]
+    n: jnp.ndarray     # [B, d]
+    m: jnp.ndarray     # [B, d]  running log-max stabilizer
+
+
+def slstm_seq(p, cfg: ModelConfig, pol: Policy, wx, state: SLSTMState):
+    """wx: [B, S, 4d] precomputed input projections; scan over time."""
+    B, S, _ = wx.shape
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    r = p["r"].astype(jnp.float32)
+    cb = lambda a: pol.constrain(a, "batch", "rnn")   # pin carry sharding:
+    # without this SPMD replicates the scan carry and inserts a per-STEP
+    # all-reduce (measured: 24.6k ARs / 424 GB per train step)
+
+    def step(st: SLSTMState, wt):
+        hH = st.h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hH, r).reshape(B, 4 * d)
+        pre = wt + rec + p["bias"]
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        m_new = jnp.maximum(ft + st.m, it)               # exp-gating stabilizer
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(ft + st.m - m_new)
+        c = f * st.c + i * z
+        n = f * st.n + i
+        h = o * c / jnp.maximum(n, 1.0)
+        return SLSTMState(cb(h), cb(c), cb(n), cb(m_new)), h
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1).astype(jnp.float32))
+    return hs.swapaxes(0, 1), state
+
+
+def slstm_forward(p, cfg: ModelConfig, pol: Policy, x, state=None,
+                  return_state=False):
+    B, S, d = x.shape
+    h = L.apply_norm(p["ln"], x, cfg.norm_eps, cfg.norm_type)
+    wx = h @ p["w"]
+    wx = pol.constrain(wx, "batch", "seq", "rnn")
+    if state is None:
+        z = pol.constrain(jnp.zeros((B, d), jnp.float32), "batch", "rnn")
+        m0 = pol.constrain(jnp.full((B, d), -1e9, jnp.float32),
+                           "batch", "rnn")
+        state = SLSTMState(z, z, z, m0)   # constrained carry: see mLSTM note
+    hs, state = slstm_seq(p, cfg, pol, wx, state)
+    hs = L.apply_norm(p["gn"], hs.astype(x.dtype), cfg.norm_eps, "rmsnorm")
+    # post-up GeGLU MLP (paper's sLSTM block)
+    u = hs @ p["up"]
+    a, b = jnp.split(u, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ p["down"]
+    return (y, state) if return_state else y
+
+
+# ------------------------------------------------------------------ model
+
+class XLSTMCache(NamedTuple):
+    mC: jnp.ndarray    # [n_m_layers, B, H, dh, dh]
+    mn: jnp.ndarray    # [n_m_layers, B, H, dh]
+    mconv: jnp.ndarray  # [n_m_layers, B, W-1, di] causal-conv tails
+    sh: jnp.ndarray    # [n_s_layers, B, d] x4
+    sc: jnp.ndarray
+    sn: jnp.ndarray
+    sm: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_params(cfg: ModelConfig, pol: Policy, key):
+    pat = _pattern(cfg)
+    reps = cfg.n_layers // len(pat)
+    ke, kl, kn = jax.random.split(key, 3)
+    rkeys = jax.random.split(kl, reps)
+
+    def superblock(k):
+        sub = jax.random.split(k, len(pat))
+        return {f"b{i}_{t}": (mlstm_block_init(sub[i], cfg) if t == "m"
+                              else slstm_block_init(sub[i], cfg))
+                for i, t in enumerate(pat)}
+
+    stacked = jax.vmap(superblock)(rkeys)
+    return {
+        "embed": L.embed_init(ke, L.padded_vocab(cfg), cfg.d_model,
+                              cfg.pdtype()),
+        "blocks": L.stack_layers(stacked),
+        "norm": L.norm_init(cfg.d_model, cfg.pdtype(), cfg.norm_type),
+    }
+
+
+def forward(cfg: ModelConfig, pol: Policy, params, tokens, embeds=None,
+            positions=None):
+    pat = _pattern(cfg)
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype())
+    x = pol.constrain(x, "batch", "seq", None)
+
+    def body(x, bp):
+        for i, t in enumerate(pat):
+            p = bp[f"b{i}_{t}"]
+            if t == "m":
+                x = x + mlstm_forward(p, cfg, pol, x)
+            else:
+                x = x + slstm_forward(p, cfg, pol, x)
+        return pol.constrain(x, "batch", "seq", None), None
+
+    fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, pol: Policy, batch: int, max_len: int,
+               dtype=jnp.float32) -> XLSTMCache:
+    pat = _pattern(cfg)
+    reps = cfg.n_layers // len(pat)
+    di, H, dh = _mlstm_dims(cfg)
+    n_m = reps * sum(1 for t in pat if t == "m")
+    n_s = reps * sum(1 for t in pat if t == "s")
+    d = cfg.d_model
+    return XLSTMCache(
+        mC=jnp.zeros((max(n_m, 1), batch, H, dh, dh), dtype),
+        mn=jnp.zeros((max(n_m, 1), batch, H, dh), dtype),
+        mconv=jnp.zeros((max(n_m, 1), batch, cfg.conv_width - 1, di), dtype),
+        sh=jnp.zeros((max(n_s, 1), batch, d), dtype),
+        sc=jnp.zeros((max(n_s, 1), batch, d), dtype),
+        sn=jnp.zeros((max(n_s, 1), batch, d), dtype),
+        sm=jnp.full((max(n_s, 1), batch, d), -1e9, dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def cache_axes(cfg: ModelConfig) -> XLSTMCache:
+    return XLSTMCache(
+        mC=("layers", "batch", None, None, "rnn"),
+        mn=("layers", "batch", None, None),
+        mconv=("layers", "batch", None, "rnn"),
+        sh=("layers", "batch", None), sc=("layers", "batch", None),
+        sn=("layers", "batch", None), sm=("layers", "batch", None),
+        pos=())
+
+
+def decode_step(cfg: ModelConfig, pol: Policy, params, cache: XLSTMCache,
+                tokens):
+    """One-token decode: recurrent state only, O(1) in context length."""
+    pat = _pattern(cfg)
+    reps = cfg.n_layers // len(pat)
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype())
+
+    m_per, s_per = (sum(1 for t in pat if t == c) for c in "ms")
+
+    def body(x, xs):
+        bp, mC, mn, mcv, sh, sc, sn, sm = xs
+        mi = si = 0
+        nmC, nmn, nmcv, nsh, nsc, nsn, nsm = ([] for _ in range(7))
+        for i, t in enumerate(pat):
+            p = bp[f"b{i}_{t}"]
+            if t == "m":
+                st = (MLSTMState(mC[mi], mn[mi]), mcv[mi])
+                y, (cell, conv) = mlstm_forward(p, cfg, pol, x, state=st,
+                                                return_state=True)
+                nmC.append(cell.C), nmn.append(cell.n), nmcv.append(conv)
+                mi += 1
+            else:
+                st = SLSTMState(sh[si], sc[si], sn[si], sm[si])
+                y, st = slstm_forward(p, cfg, pol, x, state=st,
+                                      return_state=True)
+                nsh.append(st.h), nsc.append(st.c)
+                nsn.append(st.n), nsm.append(st.m)
+                si += 1
+            x = x + y
+        pk = lambda xs: jnp.stack(xs) if xs else jnp.zeros((0,))
+        return x, (pk(nmC), pk(nmn), pk(nmcv), pk(nsh), pk(nsc), pk(nsn),
+                   pk(nsm))
+
+    rs = lambda a, per: a.reshape(reps, max(per, 1), *a.shape[1:]) \
+        if per else jnp.zeros((reps, 1) + a.shape[1:], a.dtype)
+    xs = (params["blocks"], rs(cache.mC, m_per), rs(cache.mn, m_per),
+          rs(cache.mconv, m_per),
+          rs(cache.sh, s_per), rs(cache.sc, s_per), rs(cache.sn, s_per),
+          rs(cache.sm, s_per))
+    x, (mC, mn, mcv, sh, sc, sn, sm) = jax.lax.scan(body, x, xs)
+    fl = lambda a, per, old: (a.reshape(-1, *a.shape[2:]).astype(old.dtype)
+                              if per else old)
+    x = L.apply_norm(params["norm"], x, cfg.norm_eps, cfg.norm_type)
+    logits = L.unembed(cfg, pol, x, params["embed"])
+    new = XLSTMCache(mC=fl(mC, m_per, cache.mC), mn=fl(mn, m_per, cache.mn),
+                     mconv=fl(mcv, m_per, cache.mconv),
+                     sh=fl(sh, s_per, cache.sh), sc=fl(sc, s_per, cache.sc),
+                     sn=fl(sn, s_per, cache.sn), sm=fl(sm, s_per, cache.sm),
+                     pos=cache.pos + 1)
+    return logits, new

@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + greedy decode over any family.
+
+``serve_step`` is the function the decode-shape dry-run cells lower: one new
+token for every sequence in the batch against a KV cache / recurrent state
+of the cell's context length. ``generate`` is the example-facing loop
+(prefill where the family supports cache seeding, else token-by-token
+replay), with greedy sampling.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.models.registry import get_family
+from repro.sharding.policy import Policy
+
+
+def make_serve_step(cfg: ModelConfig, pol: Policy):
+    """(params, cache, tokens [B,1]) -> (next_tokens [B,1], cache)."""
+    family = get_family(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = family.decode_step(cfg, pol, params, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def make_decode_logits_step(cfg: ModelConfig, pol: Policy):
+    """Raw decode step (logits out) — what the dry-run lowers."""
+    family = get_family(cfg)
+
+    def step(params, cache, tokens):
+        return family.decode_step(cfg, pol, params, cache, tokens)
+
+    return step
+
+
+def generate(cfg: ModelConfig, pol: Policy, params, prompts,
+             max_new: int = 16, max_len: Optional[int] = None,
+             embeds=None) -> np.ndarray:
+    """Greedy generation for examples/tests. prompts: [B, S] int32."""
+    family = get_family(cfg)
+    B, S = prompts.shape
+    max_len = max_len or (S + max_new)
+    step = jax.jit(make_serve_step(cfg, pol))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        hidden, cache = jax.jit(
+            lambda p, t: lm.prefill(cfg, pol, p, t, max_len, embeds=embeds)
+        )(params, prompts)
+        from repro.models.layers import unembed
+        logits = unembed(cfg, pol, hidden[:, -1:], params["embed"])
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    elif cfg.family == "encdec":
+        from repro.models import encdec
+        memory = jax.jit(lambda p, e: encdec.encode(cfg, pol, p, e))(
+            params, embeds)
+        cache = encdec.init_cache(cfg, pol, B, max_len)
+        xk, xv = encdec.prefill_cross_kv(cfg, pol, params, memory)
+        cache = cache._replace(xk=xk, xv=xv)
+        tok = prompts[:, :1]
+        for i in range(S - 1):          # teacher-forced replay of the prompt
+            _, cache = step(params, cache, prompts[:, i:i + 1])
+        tok = prompts[:, -1:]
+    else:
+        # recurrent families: replay the prompt token by token
+        cache = family.init_cache(cfg, pol, B, max_len)
+        for i in range(S - 1):
+            _, cache = step(params, cache, prompts[:, i:i + 1])
+        tok = prompts[:, -1:]
+
+    out = [np.asarray(tok)]
+    for _ in range(max_new - 1):
+        tok, cache = step(params, cache, tok)
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)

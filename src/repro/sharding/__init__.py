@@ -1,0 +1,6 @@
+from repro.sharding.partitioning import (LOGICAL_RULES, logical_sharding,
+                                         logical_spec, shard_params_spec,
+                                         constrain)
+
+__all__ = ["LOGICAL_RULES", "logical_sharding", "logical_spec",
+           "shard_params_spec", "constrain"]

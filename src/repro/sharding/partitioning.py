@@ -1,0 +1,77 @@
+"""Logical-axis partitioning (MaxText-style) for the production mesh.
+
+Every parameter/activation is annotated with a tuple of *logical* axis names;
+a rule table maps logical names to mesh axes. Changing the parallelism
+strategy (pure TP, TP+FSDP/ZeRO-3, expert parallelism, sequence parallelism)
+means swapping rule tables, not touching model code.
+
+Mesh axes (see repro.launch.mesh):
+  pod    - slowest (DCN / inter-pod) axis; pure data parallel
+  data   - intra-pod data parallel (also hosts FSDP shards and the sequence
+           axis of long-context cells)
+  model  - tensor/expert parallel axis
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules: tensor parallel on "model", ZeRO-3-style parameter sharding
+# of the non-TP dimension over "data" (large embeds/mlp only; small leaves
+# replicated), batch over ("pod","data").
+LOGICAL_RULES: dict[str, Optional[str | tuple]] = {
+    "batch": ("pod", "data"),
+    "attn_batch": ("pod", "data"),  # batch axis *during attention* (policy may
+                                    # extend it over "model": dp_batch mode)
+    "seq": None,
+    "kv_seq": None,              # K/V time axis inside attention; stays
+                                 # replicated when "seq" is sharded (dp_seq)
+                                 # so XLA all-gathers K/V once per layer
+    "cache_seq": None,           # KV-cache time axis (policy: "model" for
+                                 # flash-decoding style decode)
+    "seq_shard": "data",         # sequence parallelism for long-context decode
+    "embed": None,
+    "embed_fsdp": "data",        # ZeRO-3: shard hidden dim of big matrices
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "expert_cap": None,
+    "layers": None,
+    "rnn": "model",
+    "conv": None,
+}
+
+# Pure tensor-parallel rules (no ZeRO): used on small models / serving.
+TP_ONLY_RULES = dict(LOGICAL_RULES, embed_fsdp=None)
+
+
+def logical_spec(axes: Sequence[Optional[str]],
+                 rules: Mapping[str, Optional[str | tuple]] = LOGICAL_RULES
+                 ) -> P:
+    """Tuple of logical axis names -> PartitionSpec."""
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def logical_sharding(mesh: Mesh, axes: Sequence[Optional[str]],
+                     rules=LOGICAL_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(axes, rules))
+
+
+def shard_params_spec(axes_tree, rules=LOGICAL_RULES):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(lambda ax: logical_spec(ax, rules), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x, *axes, rules=LOGICAL_RULES):
+    """with_sharding_constraint by logical axes; no-op outside a mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_spec(axes, rules))
+    except (ValueError, RuntimeError):
+        return x

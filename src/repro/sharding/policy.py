@@ -1,0 +1,285 @@
+"""Per-(arch x mesh x shape) sharding policy resolution.
+
+The production mesh is fixed by the assignment — ``("data","model")`` =
+(16,16) single-pod, ``("pod","data","model")`` = (2,16,16) multi-pod — but
+the right *use* of those axes depends on the workload. The resolver picks a
+parallelism strategy by napkin math over analytic parameter counts and
+token volumes (the §Perf methodology, executed in code), then builds the
+logical-rule table the models' ``constrain`` calls read.
+
+Training strategies (estimated collective bytes per step, P = param bytes,
+tok_col = tokens per TP column, L = layers):
+
+  dp_zero1  — batch spans every mesh axis, params replicated, optimizer
+              sharded over "data". Collective = grad all-reduce ~ 2P.
+              Feasible when P fits HBM alongside activations.
+  dp_zero3  — batch spans every mesh axis, params sharded over
+              ("data","model") (ZeRO-3). Collective ~ 4P (3x param
+              all-gather across fwd/remat/bwd + grad reduce-scatter).
+  tp        — Megatron tensor parallel over "model" + ZeRO-3 over "data":
+              collective ~ 4P/tp + 6 L tok_col d (per-layer activation
+              all-reduces). Wins when P is huge (MoE) so the param mass
+              dominates, or when the batch cannot span the model axis.
+
+The baseline recorded in EXPERIMENTS.md §Perf is strategy="tp" for every
+cell (the first thing a Megatron-shaped framework does); "auto" is the
+beyond-paper optimized configuration.
+
+Serving (prefill/decode) always replicates weights over "data" (no ZeRO
+gathers on the latency path) and shards attention by head-parallelism when
+head counts divide, else falls back per the mode ladder below.
+
+Attention modes:
+  tp_heads — Megatron head-parallel attention; GQA KV heads replicated
+             ``kv_repeat``x when KV < TP (exact).
+  dp_batch — batch-parallel attention (Ulysses-style reshard) for head
+             counts that do not divide TP.
+  none     — attention unsharded over "model" (always correct, last resort).
+Decode: ``seq_kv`` shards the KV-cache time axis over "model"
+(flash-decoding) when heads cannot shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Optional
+
+from repro.models import analysis
+from repro.models.config import ModelConfig
+from repro.sharding import partitioning
+
+Axis = Optional[str | tuple]
+
+HBM_BUDGET = 12e9          # per-chip bytes we allow the plan to claim
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    rules: Mapping[str, Axis]     # logical axis -> mesh axis table
+    strategy: str                 # tp | dp_zero1 | dp_zero3 | serve
+    attn_mode: str                # tp_heads | dp_batch | none
+    decode_attn: str              # tp_heads | seq_kv | none
+    kv_repeat: int                # KV head replication factor (tp_heads)
+    expert_pad: int               # padded expert count (0 = not MoE)
+    batch_axes: Axis              # mesh axes the global batch shards over
+    notes: tuple[str, ...] = ()   # human-readable resolution log
+
+    def constrain(self, x, *axes):
+        return partitioning.constrain(x, *axes, rules=self.rules)
+
+    def spec(self, axes):
+        return partitioning.logical_spec(axes, self.rules)
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def single_device_policy(cfg: ModelConfig) -> Policy:
+    """No-op policy for CPU smoke tests / single-device runs."""
+    rules = {k: None for k in partitioning.LOGICAL_RULES}
+    return Policy(rules=rules, strategy="single", attn_mode="tp_heads",
+                  decode_attn="tp_heads", kv_repeat=1,
+                  expert_pad=cfg.n_experts, batch_axes=None)
+
+
+def _batch_axes_for(mesh_axes, dp_axes, global_batch):
+    for cut in range(len(dp_axes), 0, -1):
+        axes = dp_axes[:cut]
+        if global_batch % _prod(mesh_axes[a] for a in axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def _attn_mode(cfg, tp, dp, global_batch, batch_axes, notes):
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    kv_repeat = 1
+    if H % tp == 0 and (KV % tp == 0 or tp % KV == 0):
+        mode = "tp_heads"
+        if KV % tp != 0:
+            kv_repeat = tp // KV
+            notes.append(f"kv_heads {KV} < TP {tp}: replicated x{kv_repeat}")
+    elif batch_axes is not None and global_batch % (dp * tp) == 0:
+        mode = "dp_batch"
+        notes.append(f"heads {H} % TP {tp} != 0: batch-parallel attention")
+    else:
+        mode = "none"
+        notes.append(f"heads {H} % TP {tp} != 0 and batch {global_batch} % "
+                     f"{dp * tp} != 0: attention unsharded on model")
+    return mode, kv_repeat
+
+
+def _train_strategy(cfg: ModelConfig, mesh_axes, global_batch: int,
+                    seq: int, notes: list) -> str:
+    """Napkin-math candidate selection (bytes per step, lower = better)."""
+    tp = mesh_axes.get("model", 1)
+    dp = _prod(mesh_axes[a] for a in ("pod", "data") if a in mesh_axes)
+    all_chips = dp * tp
+    P = analysis.param_count(cfg) * analysis.param_dtype_bytes(cfg)
+    mom = 2 * analysis.param_count(cfg) * 4
+    d, L = cfg.d_model, cfg.n_layers
+    bc = 2 if cfg.compute_dtype == "bfloat16" else 4
+    tok = global_batch * seq
+
+    # MoE resharding penalty: dispatch/combine traffic scales with the
+    # tokens a rank routes x top_k x capacity factor
+    moe_pen = 0.0
+    if cfg.n_experts:
+        moe_pen = 2.0 * L * cfg.experts_per_token * cfg.capacity_factor \
+            * d * bc
+
+    cands: dict[str, float] = {}
+    if global_batch % all_chips == 0:
+        # per-chip residency: replicated params + sharded moments
+        if P + mom / dp + P <= HBM_BUDGET:
+            cands["dp_zero1"] = 2.0 * P + moe_pen * tok / all_chips
+        if (P + mom) / all_chips * 3 <= HBM_BUDGET and \
+                d % all_chips == 0:
+            cands["dp_zero3"] = 4.0 * P + moe_pen * tok / all_chips
+    tok_col = tok / dp
+    if (P + mom) / all_chips * 3 <= HBM_BUDGET:
+        # activation-AR coefficients calibrated against measured HLO
+        # traffic (remat re-gathers + loss-vocab ARs roughly double the
+        # 6-AR/layer first-principles count). When heads do not divide TP
+        # the tp strategy uses dp_batch attention — no attention ARs, only
+        # MLP ARs + the attention reshard — measured ~0.6x.
+        coeff = 12.0 if cfg.n_heads % tp == 0 else 7.0
+        cands["tp"] = 4.0 * P / tp + coeff * L * tok_col * d * bc \
+            + moe_pen * tok_col
+    # sequence-parallel DP: batch over (pod, data), seq over "model";
+    # K/V all-gathered per attention layer. Not for ssm (the chunked
+    # mLSTM reshapes the sequence axis).
+    if global_batch % dp == 0 and seq % tp == 0 and cfg.family != "ssm" \
+            and (P + mom) / (dp * 3) * 3 <= HBM_BUDGET:
+        n_attn = cfg.n_layers if cfg.family != "hybrid" else \
+            sum(1 for i in range(cfg.n_layers)
+                if (cfg.block_pattern or ("rec", "rec", "attn"))
+                [i % len(cfg.block_pattern or (1, 1, 1))] == "attn")
+        kv_bytes = (global_batch / dp) * seq * 2 * cfg.n_kv_heads * \
+            cfg.hd * bc
+        # 6 = fwd + remat-refwd gathers + bwd dK/dV reduce-scatters
+        cands["dp_seq"] = 4.0 * P + 6.0 * n_attn * kv_bytes \
+            + moe_pen * tok / all_chips
+    if not cands:
+        cands["tp"] = math.inf
+        notes.append("no strategy fits HBM budget cleanly; tp fallback")
+    best = min(cands, key=cands.get)
+    est = " ".join(f"{k}={v / 1e9:.1f}GB" for k, v in sorted(cands.items()))
+    notes.append(f"strategy napkin [{est}] -> {best}")
+    return best
+
+
+def resolve(cfg: ModelConfig, mesh_axes: Mapping[str, int],
+            global_batch: int, step: str, seq: int = 4096,
+            strategy: str = "auto") -> Policy:
+    """Pick a sharding policy.
+
+    Args:
+      cfg:          model config (full-size dims).
+      mesh_axes:    e.g. {"pod": 2, "data": 16, "model": 16}.
+      global_batch: batch size of this shape cell.
+      step:         "train" | "prefill" | "decode".
+      seq:          sequence length (napkin math for strategy choice).
+      strategy:     "auto" | "tp" | "dp_zero1" | "dp_zero3".
+                    "tp" reproduces the §Perf baseline.
+    """
+    tp = mesh_axes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    dp = _prod(mesh_axes[a] for a in dp_axes)
+    all_axes = dp_axes + (("model",) if "model" in mesh_axes else ())
+    notes: list[str] = []
+
+    if step == "train":
+        strat = _train_strategy(cfg, mesh_axes, global_batch, seq, notes) \
+            if strategy == "auto" else strategy
+    else:
+        strat = "serve"
+
+    rules: dict[str, Axis] = dict(partitioning.LOGICAL_RULES)
+
+    # ---------------- pure data-parallel strategies: model axis joins batch
+    if strat in ("dp_zero1", "dp_zero3"):
+        batch_axes = all_axes
+        for ax in ("heads", "kv_heads", "mlp", "expert", "vocab", "rnn"):
+            rules[ax] = None
+        rules["batch"] = batch_axes
+        rules["attn_batch"] = batch_axes
+        rules["cache_seq"] = None
+        rules["embed_fsdp"] = all_axes if strat == "dp_zero3" else None
+        notes.append(f"{strat}: batch spans {batch_axes}; "
+                     f"params {'sharded ' + str(all_axes) if strat == 'dp_zero3' else 'replicated'}")
+        return Policy(rules=rules, strategy=strat, attn_mode="tp_heads",
+                      decode_attn="tp_heads", kv_repeat=1,
+                      expert_pad=cfg.n_experts,
+                      batch_axes=batch_axes, notes=tuple(notes))
+
+    # ---------------- sequence-parallel DP: seq over "model", ZeRO on data
+    if strat == "dp_seq":
+        batch_axes = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        for ax in ("heads", "kv_heads", "mlp", "expert", "vocab", "rnn"):
+            rules[ax] = None
+        rules["batch"] = batch_axes
+        rules["attn_batch"] = batch_axes
+        rules["seq"] = "model"
+        rules["kv_seq"] = None          # K/V gathered per layer (exact)
+        rules["cache_seq"] = None
+        rules["embed_fsdp"] = "data"
+        notes.append(f"dp_seq: batch over {batch_axes}, seq over model "
+                     "(per-layer K/V all-gather), ZeRO-3 over data")
+        return Policy(rules=rules, strategy=strat, attn_mode="dp_seq",
+                      decode_attn="tp_heads", kv_repeat=1,
+                      expert_pad=cfg.n_experts,
+                      batch_axes=batch_axes, notes=tuple(notes))
+
+    # ---------------- tensor-parallel (train baseline) / serving
+    batch_axes = _batch_axes_for(mesh_axes, dp_axes, global_batch)
+    if batch_axes is None:
+        notes.append(f"batch {global_batch} not shardable on {dp_axes}: "
+                     "replicated")
+    attn_mode, kv_repeat = _attn_mode(cfg, tp, dp, global_batch, batch_axes,
+                                      notes)
+    if step == "decode":
+        decode_attn = "tp_heads" if attn_mode == "tp_heads" else "seq_kv"
+        if decode_attn == "seq_kv":
+            notes.append("decode: KV-cache time axis sharded over model "
+                         "(flash-decoding)")
+    else:
+        decode_attn = "tp_heads" if attn_mode == "tp_heads" else "none"
+
+    expert_pad = 0
+    if cfg.n_experts:
+        expert_pad = int(math.ceil(cfg.n_experts / tp) * tp)
+        if expert_pad != cfg.n_experts:
+            notes.append(f"experts {cfg.n_experts} padded to {expert_pad} "
+                         f"for EP={tp}")
+
+    rules["batch"] = batch_axes
+    if attn_mode == "dp_batch":
+        flat = (batch_axes if isinstance(batch_axes, tuple)
+                else (batch_axes,) if batch_axes else ())
+        rules["attn_batch"] = tuple(flat) + ("model",)
+        rules["heads"] = None
+        rules["kv_heads"] = None
+    elif attn_mode == "tp_heads":
+        rules["attn_batch"] = batch_axes
+        rules["heads"] = "model"
+        rules["kv_heads"] = "model"
+    else:
+        rules["attn_batch"] = batch_axes
+        rules["heads"] = None
+        rules["kv_heads"] = None
+    rules["cache_seq"] = "model" if decode_attn == "seq_kv" else None
+    if strat == "serve":
+        # serving never pays ZeRO all-gathers on the latency path
+        rules["embed_fsdp"] = None
+        notes.append("serve: weights replicated over data (no ZeRO gathers)")
+    elif cfg.d_model % max(mesh_axes.get("data", 1), 1) != 0:
+        rules["embed_fsdp"] = None
+        notes.append("d_model not divisible by data axis: FSDP off")
+    return Policy(rules=rules, strategy=strat, attn_mode=attn_mode,
+                  decode_attn=decode_attn, kv_repeat=kv_repeat,
+                  expert_pad=expert_pad, batch_axes=batch_axes,
+                  notes=tuple(notes))

@@ -1,0 +1,65 @@
+"""Cross-entropy loss computed in sequence chunks.
+
+For 100k-256k vocabularies a full [B, S, V] logit tensor at 1M tokens is
+terabytes; real frameworks never materialize it. We scan over sequence
+chunks: each step computes [B, chunk, V] logits from the final hidden
+states, the label log-prob, and the log-partition — O(B*chunk*V) transient
+memory regardless of S. Padded vocab rows are masked exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding.policy import Policy
+
+IGNORE = -1          # label value that is excluded from the loss
+
+
+def chunked_ce(cfg: ModelConfig, pol: Policy, hidden, embed_w, labels,
+               chunk: int = 512, z_loss: float = 0.0):
+    """hidden: [B, S, d]; embed_w: [Vpad, d]; labels: [B, S] (-1 = ignore).
+
+    Returns (mean loss over non-ignored tokens, dict of scalars).
+    """
+    B, S, d = hidden.shape
+    Vpad = embed_w.shape[0]
+    if pol.rules.get("seq") is not None:
+        chunk = S          # dp_seq: chunking would reshape the sharded axis
+    chunk = min(chunk, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=IGNORE)
+    hs = hidden.reshape(B, n, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    w = embed_w.astype(hidden.dtype)
+    vmask = (jnp.arange(Vpad) < cfg.vocab_size)
+
+    def step(carry, xs):
+        tot, cnt, zacc = carry
+        h, lab = xs
+        logits = (h @ w.T).astype(jnp.float32)
+        logits = jnp.where(vmask, logits, -1e30)
+        if cfg.logit_softcap > 0:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        logits = pol.constrain(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.clip(lab, 0, cfg.vocab_size - 1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        valid = lab != IGNORE
+        nll = jnp.where(valid, lse - gold, 0.0)
+        z = jnp.where(valid, lse ** 2, 0.0)
+        return (tot + nll.sum(), cnt + valid.sum(), zacc + z.sum()), None
+
+    (tot, cnt, zacc), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32),
+               jnp.zeros((), jnp.float32)), (hs, ls))
+    denom = jnp.maximum(cnt, 1).astype(jnp.float32)
+    loss = tot / denom
+    if z_loss > 0:
+        loss = loss + z_loss * zacc / denom
+    return loss, {"ce": tot / denom, "tokens": cnt}

@@ -1,0 +1,97 @@
+"""AdamW with gradient clipping and LR schedules (self-contained, no optax).
+
+Optimizer moments inherit the parameter logical axes, so under ZeRO-style
+rules they shard exactly like the parameters (ZeRO-1/3 falls out of the rule
+table, not special code). For >=100B-parameter configs the moments are kept
+in bfloat16 (``dtype="bfloat16"``) — the gradient-compression knob recorded
+in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"     # "bfloat16" for very large models
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: AdamWConfig, params) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    z = lambda p: jnp.zeros_like(p, dtype=dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(z, params), v=jax.tree.map(z, params))
+
+
+def global_norm(tree):
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def apply(cfg: AdamWConfig, state: OptState, params, grads,
+          decay_mask=None):
+    """One AdamW step. decay_mask: pytree of bools (False = no weight decay;
+    default: decay only rank>=2 tensors)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.moment_dtype)
+    if decay_mask is None:
+        decay_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    def upd(p, g, m, v, dk):
+        g = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m1 / b1c
+        vhat = v1 / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            upd = upd + jnp.where(dk, cfg.weight_decay, 0.0) * \
+                p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * upd).astype(p.dtype),
+                m1.astype(dt), v1.astype(dt))
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v, decay_mask)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x:
+                         isinstance(x, tuple) and len(x) == 3)
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x:
+                         isinstance(x, tuple) and len(x) == 3)
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x:
+                         isinstance(x, tuple) and len(x) == 3)
+    return new_p, OptState(step=step, m=new_m, v=new_v), \
+        {"lr": lr, "grad_norm": gn}

@@ -1,0 +1,87 @@
+"""Train step: microbatched grad accumulation + AdamW + metrics.
+
+``make_train_step`` builds a pure (state, batch) -> (state, metrics)
+function for any of the model families. With ``n_micro > 1`` the global
+batch is split into microbatches accumulated in a lax.scan — the standard
+large-scale pattern that lets XLA's latency-hiding scheduler overlap the
+reduce-scatter of one microbatch's gradients with the next one's compute.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_family
+from repro.sharding.policy import Policy
+from repro.train import optim as optim_lib
+from repro.train.loss import chunked_ce
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: optim_lib.OptState
+
+
+def init_state(cfg: ModelConfig, pol: Policy, key,
+               ocfg: Optional[optim_lib.AdamWConfig] = None):
+    from repro.models.layers import unbox
+    ocfg = ocfg or optim_lib.AdamWConfig()
+    boxed = get_family(cfg).init_params(cfg, pol, key)
+    params, axes = unbox(boxed)
+    return TrainState(params=params, opt=optim_lib.init(ocfg, params)), axes
+
+
+def make_loss_fn(cfg: ModelConfig, pol: Policy, loss_chunk: int = 512):
+    family = get_family(cfg)
+
+    def loss_fn(params, batch):
+        hidden, aux = family.forward(cfg, pol, params, batch["tokens"],
+                                     batch.get("embeds"))
+        loss, mets = chunked_ce(cfg, pol, hidden, params["embed"],
+                                batch["labels"], chunk=loss_chunk)
+        return loss + aux.astype(loss.dtype), mets
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, pol: Policy,
+                    ocfg: Optional[optim_lib.AdamWConfig] = None,
+                    n_micro: int = 1, loss_chunk: int = 512):
+    ocfg = ocfg or optim_lib.AdamWConfig()
+    loss_fn = make_loss_fn(cfg, pol, loss_chunk)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if n_micro == 1:
+            (loss, mets), grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                assert B % n_micro == 0, (B, n_micro)
+                return x.reshape(n_micro, B // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                tot, g = carry
+                (l, m), gi = grad_fn(state.params, mb)
+                return (tot + l, jax.tree.map(jnp.add, g, gi)), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, gsum), mets = jax.lax.scan(
+                acc, (jnp.zeros(()), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            mets = jax.tree.map(lambda m: m[-1], mets)
+
+        params, opt, omets = optim_lib.apply(ocfg, state.opt, state.params,
+                                             grads)
+        out = {"loss": loss, **omets,
+               **{k: v for k, v in mets.items()}}
+        return TrainState(params=params, opt=opt), out
+
+    return train_step

@@ -1,0 +1,3 @@
+from repro.workload.lublin import WorkloadParams, Workload, generate_workload, paper_workloads
+
+__all__ = ["WorkloadParams", "Workload", "generate_workload", "paper_workloads"]

@@ -1,0 +1,22 @@
+import os
+
+# Keep tests on the single real CPU device; the 512-device placeholder
+# environment is reserved for the dry-run (launched as a subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+from repro.workload.lublin import WorkloadParams, generate_workload
+
+
+@pytest.fixture(scope="session")
+def small_workload():
+    return generate_workload(WorkloadParams(
+        n_jobs=300, nodes=64, load=0.9, homogeneous=True, seed=7))
+
+
+@pytest.fixture(scope="session")
+def hetero_workload():
+    return generate_workload(WorkloadParams(
+        n_jobs=300, nodes=128, load=0.85, homogeneous=False, seed=3))

@@ -1,0 +1,198 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train / decode step on CPU, asserting output shapes + finiteness (no NaNs).
+The FULL configs are exercised only via the dry-run (see launch/dryrun.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells, get_config, smoke_config
+from repro.models.layers import unbox, unembed
+from repro.models.registry import get_family
+from repro.sharding.policy import single_device_policy
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B, S):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    embeds = None
+    if cfg.family == "encdec":
+        embeds = jax.random.normal(KEY, (B, S, cfg.d_model)) * 0.02
+    elif cfg.embeds_input and cfg.n_prefix:
+        embeds = jax.random.normal(KEY, (B, cfg.n_prefix, cfg.d_model)) * 0.02
+    return toks, embeds
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = smoke_config(arch)
+    pol = single_device_policy(cfg)
+    fam = get_family(cfg)
+    params, _ = unbox(fam.init_params(cfg, pol, KEY))
+    B, S = 2, 32
+    toks, embeds = _inputs(cfg, B, S)
+    hidden, aux = jax.jit(
+        lambda p, t, e: fam.forward(cfg, pol, p, t, e))(params, toks, embeds)
+    assert hidden.shape == (B, S, cfg.d_model)
+    logits = unembed(cfg, pol, hidden, params["embed"])
+    assert logits.shape[-1] % 16 == 0 and logits.shape[-1] >= cfg.vocab_size
+    assert bool(jnp.isfinite(hidden).all())
+    assert bool(jnp.isfinite(aux).all())
+    # padded vocab entries must never win an argmax
+    assert int(jnp.argmax(logits, -1).max()) < cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_smoke(arch):
+    cfg = smoke_config(arch)
+    pol = single_device_policy(cfg)
+    fam = get_family(cfg)
+    params, _ = unbox(fam.init_params(cfg, pol, KEY))
+    B = 2
+    cache = fam.init_cache(cfg, pol, B, 48)
+    step = jax.jit(lambda p, c, t: fam.decode_step(cfg, pol, p, c, t))
+    tok = jnp.ones((B, 1), jnp.int32)
+    for i in range(3):
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert bool(jnp.isfinite(logits).all())
+    assert int(cache.pos) == 3
+
+
+def test_full_configs_match_assignment():
+    """The full-size configs carry the exact assignment table dims."""
+    table = {   # arch: (L, d_model, H, kv, d_ff, vocab)
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }
+    for arch, (L, d, H, kv, ff, V) in table.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, kv, ff, V), arch
+    assert get_config("qwen2-moe-a2.7b").n_experts == 60
+    assert get_config("qwen2-moe-a2.7b").experts_per_token == 4
+    assert get_config("arctic-480b").n_experts == 128
+    assert get_config("arctic-480b").experts_per_token == 2
+    assert get_config("arctic-480b").dense_residual
+
+
+def test_cell_grid_is_40():
+    assert len(cells()) == 40 - 8   # 10 archs x 4 shapes - 8 long_500k skips
+    # the 8 skipped cells are explicitly recorded
+    from repro.configs import skipped_cells
+    assert len(skipped_cells()) == 8
+    assert len(cells()) + len(skipped_cells()) == 40
+
+
+def test_moe_route_exactness():
+    """With huge capacity, MoE output must equal dense per-token expert mix."""
+    cfg = smoke_config("qwen2-moe-a2.7b", capacity_factor=8.0,
+                       shared_expert_d_ff=0)
+    pol = single_device_policy(cfg)
+    from repro.models import moe as moe_lib
+    p, _ = unbox(moe_lib.moe_init(KEY, cfg, pol))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model)) * 0.5
+    out, aux = moe_lib.moe_forward(p, cfg, pol, x)
+    # oracle: per-token dense top-k mixture
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / gate.sum(-1, keepdims=True)
+
+    def tok(xv, g, ix):
+        o = 0
+        for j in range(cfg.experts_per_token):
+            h = (jax.nn.silu(xv @ p["wg"][ix[j]]) * (xv @ p["wi"][ix[j]]))
+            o = o + g[j] * (h @ p["wo"][ix[j]])
+        return o
+
+    ref = jax.vmap(jax.vmap(tok))(x, gate, idx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_decode_consistency():
+    """lm.prefill + decode must produce the same logits as full forward."""
+    from repro.models import lm
+    cfg = smoke_config("yi-6b")
+    pol = single_device_policy(cfg)
+    fam = get_family(cfg)
+    params, _ = unbox(fam.init_params(cfg, pol, KEY))
+    B, S = 2, 16
+    toks, _ = _inputs(cfg, B, S)
+    hidden, _ = fam.forward(cfg, pol, params, toks)
+    full_logits = unembed(cfg, pol, hidden, params["embed"])
+
+    # decode token-by-token from an empty cache (f32 cache: exactness)
+    cache = fam.init_cache(cfg, pol, B, S + 4, dtype=jnp.float32)
+    outs = []
+    for i in range(S):
+        lg, cache = fam.decode_step(cfg, pol, params, cache, toks[:, i:i + 1])
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=5e-3, atol=5e-3)
+
+    # prefill path agrees too
+    hid2, cache2 = lm.prefill(cfg, pol, params, toks, S + 4,
+                              cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(hid2), np.asarray(hidden),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cache2.k[:, :, :S]),
+                               np.asarray(cache.k[:, :, :S]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_recurrent_decode_matches_forward():
+    """xLSTM/RG-LRU: token-by-token decode == full-sequence forward."""
+    for arch in ("xlstm-1.3b", "recurrentgemma-2b"):
+        cfg = smoke_config(arch)
+        pol = single_device_policy(cfg)
+        fam = get_family(cfg)
+        params, _ = unbox(fam.init_params(cfg, pol, KEY))
+        B, S = 1, 12
+        toks, _ = _inputs(cfg, B, S)
+        hidden, _ = fam.forward(cfg, pol, params, toks)
+        full_logits = unembed(cfg, pol, hidden, params["embed"])
+        cache = fam.init_cache(cfg, pol, B, S + 4)
+        outs = []
+        for i in range(S):
+            lg, cache = fam.decode_step(cfg, pol, params, cache,
+                                        toks[:, i:i + 1])
+            outs.append(lg)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full_logits),
+                                   rtol=2e-2, atol=2e-2, err_msg=arch)
+
+
+def test_local_window_ring_cache():
+    """RG local attention with a ring cache must match a full cache."""
+    cfg = smoke_config("recurrentgemma-2b", local_window=8)
+    pol = single_device_policy(cfg)
+    fam = get_family(cfg)
+    params, _ = unbox(fam.init_params(cfg, pol, KEY))
+    B, S = 1, 20           # S > window: the ring wraps
+    toks, _ = _inputs(cfg, B, S)
+    hidden, _ = fam.forward(cfg, pol, params, toks)
+    full_logits = unembed(cfg, pol, hidden, params["embed"])
+    cache = fam.init_cache(cfg, pol, B, S)   # T=window=8 ring
+    assert cache.k.shape[2] == 8
+    outs = []
+    for i in range(S):
+        lg, cache = fam.decode_step(cfg, pol, params, cache, toks[:, i:i + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec[:, -4:]),
+                               np.asarray(full_logits[:, -4:]),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,145 @@
+"""Checkpointing (atomicity, rotation, elastic re-shard) and ML-cluster
+scheduler (failures, stragglers, work conservation, scale-ratio effect)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.ckpt.checkpoint import latest_step
+from repro.cluster import (ClusterConfig, ClusterSim, JobType, MLJob,
+                           slice_for)
+from repro.cluster.scheduler import workload_from_arrival_rate
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.arange(3.0)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, 3, _state(1.5), {"note": "x"})
+    st, meta = restore_checkpoint(p, jax.tree.map(np.zeros_like, _state()))
+    assert meta["step"] == 3 and meta["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(st["params"]["w"]),
+                                  np.full((4, 4), 1.5))
+    assert int(st["opt"]["step"]) == 7
+
+
+def test_restore_shape_mismatch_rejected(tmp_path):
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, 0, _state())
+    bad = {"params": {"w": np.zeros((2, 2)), "b": np.zeros(3)},
+           "opt": {"step": np.zeros((), np.int32)}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(p, bad)
+
+
+def test_manager_rotation_and_async(tmp_path):
+    p = str(tmp_path / "ck")
+    mgr = CheckpointManager(p, keep=2)
+    for s in range(5):
+        mgr.save(s, _state(float(s)))
+    mgr.wait()
+    assert latest_step(p) == 4
+    files = sorted(os.listdir(p))
+    assert len([f for f in files if f.endswith(".npz")]) == 2
+    st, meta = mgr.restore_latest(_state())
+    assert meta["step"] == 4
+    np.testing.assert_array_equal(np.asarray(st["params"]["w"]),
+                                  np.full((4, 4), 4.0))
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore with new shardings (1-device mesh: degenerate but exercises
+    the device_put path the elastic restart uses)."""
+    p = str(tmp_path / "ck")
+    save_checkpoint(p, 1, _state(2.0))
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    shardings = jax.tree.map(lambda _: sh, _state())
+    st, _ = restore_checkpoint(p, _state(), shardings=shardings)
+    assert st["params"]["w"].sharding == sh
+
+
+# ------------------------------------------------------------ cluster sim
+
+TYPES = [JobType("yi-6b:train_4k", init_time=120.0, tp_degree=16),
+         JobType("qwen2-moe:train_4k", init_time=300.0, tp_degree=16),
+         JobType("granite:eval", init_time=60.0, tp_degree=8)]
+
+
+def _run(cfg, n_jobs=120, horizon=4 * 3600.0, mean_work=64 * 600.0, seed=0):
+    sim = ClusterSim(TYPES, cfg)
+    for j in workload_from_arrival_rate(TYPES, n_jobs, horizon, mean_work,
+                                        seed=seed):
+        sim.submit(j)
+    return sim, sim.run()
+
+
+def test_all_work_completes():
+    sim, m = _run(ClusterConfig(n_chips=256, scale_ratio=2.0))
+    assert m["unfinished"] == 0
+    assert m["groups"] <= m["jobs"]           # grouping really groups
+    assert 0 < m["useful_util"] <= m["full_util"] <= 1.0 + 1e-9
+
+
+def test_grouping_amortizes_init():
+    """Useful utilization must beat one-group-per-job accounting."""
+    sim, m = _run(ClusterConfig(n_chips=256, scale_ratio=2.0))
+    # at least some groups contain >1 job
+    assert m["groups"] < m["jobs"]
+
+
+def test_scale_ratio_tradeoff_matches_paper():
+    """Paper's headline: higher k -> shorter queues impossible; higher k
+    reduces init overhead share (useful/full ratio up), lower k uses more
+    chips per group (full util up, queue time down up to a point)."""
+    waits, ratio = {}, {}
+    for k in (0.25, 4.0, 64.0):
+        _, m = _run(ClusterConfig(n_chips=256, scale_ratio=k), seed=3)
+        waits[k] = m["avg_wait"]
+        ratio[k] = m["useful_util"] / max(m["full_util"], 1e-9)
+    # init-overhead share shrinks as k grows
+    assert ratio[64.0] >= ratio[0.25] - 1e-6
+    assert m["unfinished"] == 0
+
+
+def test_failures_requeue_and_finish():
+    cfg = ClusterConfig(n_chips=256, scale_ratio=2.0, ckpt_period=120.0,
+                        mtbf_chip_hours=50.0, seed=1)
+    sim, m = _run(cfg, n_jobs=80)
+    assert m["unfinished"] == 0               # failures never lose jobs
+    assert m["failures"] > 0                  # failures actually happened
+    assert m["requeues"] >= m["failures"]
+    assert m["lost_chip_seconds"] >= 0.0
+
+
+def test_ckpt_period_bounds_lost_work():
+    """Shorter checkpoint period -> less lost work under failures."""
+    lost = {}
+    for period in (60.0, 1800.0):
+        cfg = ClusterConfig(n_chips=256, scale_ratio=2.0,
+                            ckpt_period=period, mtbf_chip_hours=30.0, seed=5)
+        _, m = _run(cfg, n_jobs=100, seed=5)
+        lost[period] = m["lost_chip_seconds"] / max(m["failures"], 1)
+    assert lost[60.0] <= lost[1800.0] + 1e-6
+
+
+def test_straggler_mitigation():
+    cfg = ClusterConfig(n_chips=256, scale_ratio=2.0, straggler_prob=0.5,
+                        straggler_factor=4.0, straggler_deadline=1.5, seed=2)
+    sim, m = _run(cfg, n_jobs=60)
+    assert m["straggler_kills"] > 0           # deadline re-dispatch fired
+    assert m["unfinished"] == 0               # and the work still finished
+
+
+def test_slice_granularity():
+    assert slice_for(256, 16) == (16, 16)
+    assert slice_for(100, 16) == (6, 16)
+    assert slice_for(8, 16) == (1, 16)
+    sim, m = _run(ClusterConfig(n_chips=64, scale_ratio=1.0))
+    assert m["unfinished"] == 0

@@ -1,0 +1,165 @@
+"""Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles,
+executed in interpret mode on CPU (the kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.packet_select.ops import fused_packet_select
+from repro.kernels.packet_select.ref import packet_select_ref
+from repro.kernels.rglru_scan.kernel import lru_chunked
+from repro.kernels.rglru_scan.ref import lru_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ------------------------------------------------------------ flash attn
+
+FLASH_CASES = [
+    # B, Sq, Skv, H, KV, hd, causal, window
+    (2, 64, 64, 4, 2, 32, True, 0),
+    (1, 128, 128, 8, 8, 64, True, 0),
+    (2, 48, 48, 4, 1, 32, True, 16),      # MQA + local window
+    (1, 32, 96, 4, 2, 32, True, 0),       # prefix offset (Skv > Sq)
+    (2, 64, 64, 4, 4, 32, False, 0),      # bidirectional (encoder)
+    (1, 40, 40, 2, 2, 16, True, 0),       # non-multiple of block
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Skv, H, KV, hd, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=32, bkv=32)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_softcap():
+    q = jax.random.normal(KEY, (1, 64, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 4, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 4, 32))
+    out = flash_attention(q, k, v, softcap=20.0, bq=32, bkv=32)
+    ref = attention_ref(q, k, v, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(8, 96), skv_extra=st.integers(0, 64),
+       h=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
+       hd=st.sampled_from([16, 32]))
+def test_flash_attention_property(sq, skv_extra, h, g, hd):
+    """Property: any (Sq, Skv>=Sq, H=KV*g, hd) agrees with the oracle."""
+    skv = sq + skv_extra
+    ks = jax.random.split(jax.random.PRNGKey(sq * 131 + skv), 3)
+    q = jax.random.normal(ks[0], (1, sq, h * g, hd))
+    k = jax.random.normal(ks[1], (1, skv, h, hd))
+    v = jax.random.normal(ks[2], (1, skv, h, hd))
+    out = flash_attention(q, k, v, bq=32, bkv=32)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------------ rglru scan
+
+LRU_CASES = [
+    # B, S, D, chunk, with_h0
+    (2, 64, 128, 16, False),
+    (1, 128, 256, 32, True),
+    (2, 50, 100, 16, True),     # non-multiples: padding path
+    (1, 8, 512, 128, False),    # chunk > S
+]
+
+
+@pytest.mark.parametrize("case", LRU_CASES)
+def test_lru_chunked_matches_ref(case):
+    B, S, D, chunk, with_h0 = case
+    ks = jax.random.split(KEY, 3)
+    log_a = -jnp.exp(jax.random.normal(ks[0], (B, S, D)) * 0.5) * 0.1
+    b = jax.random.normal(ks[1], (B, S, D))
+    h0 = jax.random.normal(ks[2], (B, D)) if with_h0 else None
+    h, hlast = lru_chunked(log_a, b, h0, chunk=chunk, bd=128, interpret=True)
+    href, hlast_ref = lru_ref(log_a, b, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(href),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hlast), np.asarray(hlast_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(4, 80), d=st.integers(1, 200),
+       chunk=st.sampled_from([8, 16, 32]))
+def test_lru_property(s, d, chunk):
+    """Property: chunked == associative-scan for arbitrary S, D, chunk."""
+    ks = jax.random.split(jax.random.PRNGKey(s * 977 + d), 2)
+    log_a = -jnp.abs(jax.random.normal(ks[0], (1, s, d))) * 0.2
+    b = jax.random.normal(ks[1], (1, s, d))
+    h, _ = lru_chunked(log_a, b, chunk=chunk, bd=128, interpret=True)
+    href, _ = lru_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(href),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_lru_decay_bounds():
+    """Stability: with |b|<=1 and a<1 the state stays bounded by 1/(1-a)."""
+    S, D = 256, 64
+    log_a = jnp.full((1, S, D), jnp.log(0.9))
+    b = jnp.ones((1, S, D)) * 0.5
+    h, _ = lru_chunked(log_a, b, chunk=64, interpret=True)
+    assert float(jnp.abs(h).max()) <= 0.5 / (1 - 0.9) + 1e-3
+
+
+# ------------------------------------------------------------ packet select
+
+def _rand_queues(key, N, H):
+    ks = jax.random.split(key, 6)
+    sum_w = jnp.abs(jax.random.normal(ks[0], (N, H))) * 1e4
+    s_j = jnp.abs(jax.random.normal(ks[1], (N, H))) * 10 + 1
+    p_j = jnp.ones((N, H))
+    oldest = jnp.abs(jax.random.normal(ks[2], (N, H))) * 100
+    t_max = jnp.full((N, H), 3600.0)
+    nonempty = (jax.random.uniform(ks[3], (N, H)) > 0.3).astype(jnp.float32)
+    nonempty = nonempty.at[:, 0].set(1.0)            # at least one nonempty
+    now = jnp.abs(jax.random.normal(ks[4], (N,))) * 1000 + 200
+    k = jnp.abs(jax.random.normal(ks[5], (N,))) * 5 + 0.1
+    m_free = jnp.round(jnp.abs(jax.random.normal(ks[0], (N,))) * 100 + 1)
+    return sum_w, s_j, p_j, oldest, t_max, nonempty, now, k, m_free
+
+
+@pytest.mark.parametrize("H", [8, 64, 128, 130])
+def test_packet_select_matches_policy(H):
+    args = _rand_queues(KEY, 16, H)
+    j, m, dur, work = fused_packet_select(*args)
+    jr, mr, durr, workr = packet_select_ref(*args)
+    np.testing.assert_array_equal(np.asarray(j), np.asarray(jr))
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dur), np.asarray(durr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(work), np.asarray(workr),
+                               rtol=1e-6)
+
+
+def test_packet_select_paper_example():
+    """Paper Fig. 3: s=1min, work=4 node-min: k=0.5 -> 8 nodes, 0.5 min."""
+    one = lambda v: jnp.asarray([v], jnp.float32)
+    H = 1
+    for k, m_exp, dur_exp in [(0.5, 8, 1.5), (1.0, 4, 2.0), (2.0, 2, 3.0),
+                              (4.0, 1, 5.0)]:
+        j, m, dur, work = fused_packet_select(
+            jnp.full((1, H), 4.0), jnp.ones((1, H)), jnp.ones((1, H)),
+            jnp.zeros((1, H)), jnp.full((1, H), 3600.0), jnp.ones((1, H)),
+            one(0.0), one(k), one(100.0))
+        assert int(m[0]) == m_exp, (k, m)
+        assert float(dur[0]) == pytest.approx(dur_exp)  # init 1 + exec 4/m

@@ -1,0 +1,24 @@
+"""Multi-host bootstrap helpers (single-process semantics on CPU)."""
+import jax
+import pytest
+
+from repro.launch import multihost
+from repro.launch.mesh import make_host_mesh
+
+
+def test_host_data_shard_single_process():
+    assert multihost.host_data_shard() == (0, 1)
+
+
+def test_mesh_span_check():
+    mesh = make_host_mesh()
+    multihost.assert_mesh_spans_processes(mesh)   # 1 device = full span
+
+
+def test_mesh_span_mismatch_detected():
+    class Fake:
+        class devices:
+            size = 7
+
+    with pytest.raises(RuntimeError):
+        multihost.assert_mesh_spans_processes(Fake())

@@ -1,0 +1,79 @@
+"""Unit tests for the pure Packet policy functions (paper §5)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packet
+
+
+class TestPaperExample:
+    """Paper Fig. 3: s = 1 min, group work = 4 node-minutes."""
+
+    @pytest.mark.parametrize("k,expected_nodes,expected_exec", [
+        (0.5, 8, 0.5), (1.0, 4, 1.0), (2.0, 2, 2.0), (4.0, 1, 4.0)])
+    def test_node_count_and_exec_time(self, k, expected_nodes, expected_exec):
+        s, work = 60.0, 4 * 60.0
+        m = packet.m_threshold(jnp.asarray(work), k, s)
+        assert int(m) == expected_nodes
+        dur = packet.group_duration(jnp.asarray(work), s, m)
+        assert float(dur) == pytest.approx(s + expected_exec * 60.0)
+
+    def test_exec_time_is_k_times_init(self):
+        # the defining property of the scale ratio
+        s, work = 60.0, 4 * 60.0
+        for k in (0.5, 1.0, 2.0, 4.0):
+            m = packet.m_threshold(jnp.asarray(work), k, s)
+            exec_time = work / float(m)
+            assert exec_time == pytest.approx(k * s)
+
+
+class TestGroupNodes:
+    def test_capped_by_free_nodes(self):
+        m = packet.group_nodes(jnp.asarray(240.0), 0.5, 60.0, 3)
+        assert int(m) == 3  # threshold would be 8
+
+    def test_ceil_guarantees_exec_le_k_init(self):
+        # non-exact division: ceil gives exec time <= k * s
+        work, k, s = 250.0, 1.0, 60.0
+        m = int(packet.m_threshold(jnp.asarray(work), k, s))
+        assert m == 5
+        assert work / m <= k * s + 1e-9
+
+    def test_at_least_one_node(self):
+        assert int(packet.m_threshold(jnp.asarray(1.0), 1000.0, 60.0)) == 1
+
+
+class TestQueueWeights:
+    def test_empty_queue_masked(self):
+        w = packet.queue_weights(
+            jnp.asarray([100.0, 0.0]), jnp.asarray([10.0, 10.0]),
+            jnp.ones(2), jnp.asarray([0.0, 0.0]), 50.0,
+            jnp.full((2,), 3600.0), jnp.asarray([True, False]))
+        assert np.isneginf(np.asarray(w)[1])
+        assert np.asarray(w)[0] > 0
+
+    def test_advisability_scales_with_work_over_init(self):
+        # C_j = sum(e)/s: doubling work doubles the weight (at equal waits)
+        args = dict(priority=jnp.ones(1), oldest_submit=jnp.asarray([0.0]),
+                    now=0.0, t_max=jnp.full((1,), 3600.0),
+                    nonempty=jnp.asarray([True]))
+        w1 = packet.queue_weights(jnp.asarray([100.0]), jnp.asarray([10.0]), **args)
+        w2 = packet.queue_weights(jnp.asarray([200.0]), jnp.asarray([10.0]), **args)
+        assert float(w2[0]) == pytest.approx(2 * float(w1[0]))
+
+    def test_waiting_raises_weight(self):
+        args = dict(sum_work=jnp.asarray([100.0]), s_j=jnp.asarray([10.0]),
+                    priority=jnp.ones(1), t_max=jnp.full((1,), 100.0),
+                    nonempty=jnp.asarray([True]))
+        w_now = packet.queue_weights(oldest_submit=jnp.asarray([0.0]), now=0.0, **args)
+        w_later = packet.queue_weights(oldest_submit=jnp.asarray([0.0]), now=100.0, **args)
+        assert float(w_later[0]) == pytest.approx(2 * float(w_now[0]))
+
+    def test_priority_multiplies(self):
+        base = dict(sum_work=jnp.asarray([100.0, 100.0]),
+                    s_j=jnp.asarray([10.0, 10.0]),
+                    oldest_submit=jnp.zeros(2), now=0.0,
+                    t_max=jnp.full((2,), 3600.0),
+                    nonempty=jnp.asarray([True, True]))
+        w = packet.queue_weights(priority=jnp.asarray([1.0, 3.0]), **base)
+        assert float(w[1]) == pytest.approx(3 * float(w[0]))

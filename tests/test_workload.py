@@ -1,0 +1,75 @@
+"""Tests for the Lublin–Feitelson workload generator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.workload.lublin import (WorkloadParams, generate_workload,
+                                   paper_workloads)
+
+
+class TestGenerator:
+    def test_load_calibration_exact(self):
+        for load in (0.85, 0.90, 0.95):
+            wl = generate_workload(WorkloadParams(n_jobs=1000, load=load, seed=1))
+            assert wl.calculated_load() == pytest.approx(load, rel=1e-6)
+
+    def test_submit_sorted_and_spans_horizon(self):
+        wl = generate_workload(WorkloadParams(n_jobs=2000, seed=2))
+        assert np.all(np.diff(wl.submit) >= 0)
+        assert wl.submit[0] == pytest.approx(0.0, abs=1.0)
+        assert wl.submit[-1] == pytest.approx(wl.params.horizon, rel=1e-6)
+
+    def test_nodes_within_bounds(self):
+        wl = generate_workload(WorkloadParams(n_jobs=2000, nodes=500, seed=3))
+        assert wl.nodes.min() >= 1
+        assert wl.nodes.max() <= 500
+
+    def test_serial_fraction_near_lublin(self):
+        wl = generate_workload(WorkloadParams(n_jobs=5000, seed=4))
+        frac = (wl.nodes == 1).mean()
+        assert 0.15 < frac < 0.40  # Lublin: ~0.244
+
+    def test_types_in_range(self):
+        wl = generate_workload(WorkloadParams(n_jobs=1000, n_types=8, seed=5))
+        assert set(np.unique(wl.jtype)) <= set(range(8))
+        assert len(np.unique(wl.jtype)) >= 4  # all popular types present
+
+    def test_homogeneous_has_lower_runtime_spread(self):
+        het = generate_workload(WorkloadParams(n_jobs=3000, seed=6))
+        hom = generate_workload(WorkloadParams(n_jobs=3000, homogeneous=True,
+                                               seed=6))
+        cv_het = het.runtime.std() / het.runtime.mean()
+        cv_hom = hom.runtime.std() / hom.runtime.mean()
+        assert cv_hom < cv_het
+
+    def test_reproducible(self):
+        a = generate_workload(WorkloadParams(n_jobs=100, seed=42))
+        b = generate_workload(WorkloadParams(n_jobs=100, seed=42))
+        np.testing.assert_array_equal(a.submit, b.submit)
+        np.testing.assert_array_equal(a.runtime, b.runtime)
+
+    def test_init_time_for_proportion(self):
+        wl = generate_workload(WorkloadParams(n_jobs=500, seed=8))
+        for sp in (0.05, 0.3, 0.5):
+            s = wl.init_time_for_proportion(sp)
+            n = wl.n_jobs
+            achieved = n * s / (n * s + wl.runtime.sum())
+            assert achieved == pytest.approx(sp, rel=1e-9)
+
+    def test_paper_workloads_structure(self):
+        flows = paper_workloads(seed=0)
+        assert set(flows) == {f"{kind}{ld:.2f}" for kind in ("hetero", "homog")
+                              for ld in (0.85, 0.90, 0.95)}
+        assert flows["hetero0.85"].params.nodes == 500
+        assert flows["homog0.90"].params.nodes == 100
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([0.85, 0.9, 0.95]),
+           st.booleans())
+    def test_property_any_seed_valid(self, seed, load, homog):
+        wl = generate_workload(WorkloadParams(
+            n_jobs=200, load=load, homogeneous=homog, seed=seed,
+            nodes=100 if homog else 500))
+        assert np.all(wl.runtime > 0)
+        assert np.all(np.isfinite(wl.work))
+        assert wl.calculated_load() == pytest.approx(load, rel=1e-6)
