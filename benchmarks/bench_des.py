@@ -1,0 +1,187 @@
+"""DES microbenchmark: group-log event loop vs the seed O(N)-writes path.
+
+Measures ms/experiment for
+
+  * ``reference`` — the seed implementation (`simulate_packet_reference`:
+    per-event O(N) masked metric writes, fixed 512-slot ring),
+  * ``group_log`` — the production path (`simulate_packet`: O(1) log
+    appends + vectorized post-pass, ring = min(M, N)),
+  * ``fused``     — the group-log path amortized through the fused (k x S)
+    lane engine of `repro.core.sweep`,
+
+on a paper-scale 5000-job homogeneous workload grid, plus a
+scaling-with-N series, and records everything to
+``benchmarks/results/BENCH_des.json`` so the perf trajectory is tracked
+across PRs.
+
+Usage:
+    python -m benchmarks.bench_des            # full (5000-job headline)
+    python -m benchmarks.bench_des --smoke    # <= 30 s CI-budget variant
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (pack_workload, resolve_ring, simulate_packet,
+                        simulate_packet_reference)
+from repro.workload.lublin import WorkloadParams, generate_workload
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+BENCH_PATH = os.path.join(RESULTS_DIR, "BENCH_des.json")
+
+
+REPEATS = 5     # best-of-R to shed scheduler/allocator noise
+
+
+def _bench_sequential(sim_fn, pw, ks, s, m_nodes, **kw):
+    """Best-of ms/experiment for jitted per-k sequential dispatch."""
+    f = jax.jit(lambda k: sim_fn(pw, k, s, m_nodes, **kw).makespan)
+    f(float(ks[0])).block_until_ready()                   # compile
+    best = np.inf
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for k in ks:
+            f(float(k)).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best / len(ks) * 1e3
+
+
+def _bench_grid(wl, ks, s_props, mode):
+    """Best-of ms/experiment through the sweep engines in the given mode.
+
+    Inputs are packed once outside the timer (like _bench_sequential), so
+    the recorded number is the engine itself, not per-call host repacking.
+    """
+    import jax.numpy as jnp
+    from repro.core.sweep import _packet_lanes, _packet_one, lane_sharding
+
+    pw = pack_workload(wl)
+    m = int(wl.params.nodes)
+    ring = resolve_ring(m, pw.n_jobs)
+    s_vals = jnp.asarray([wl.init_time_for_proportion(p) for p in s_props],
+                         jnp.float32)
+    ks_arr = jnp.asarray(ks, jnp.float32)
+    if mode == "auto":
+        mode = ("fused" if lane_sharding(len(ks) * len(s_props)) is not None
+                else "seq")
+
+    if mode == "fused":
+        k_lanes = jnp.repeat(ks_arr, len(s_props))
+        s_lanes = jnp.tile(s_vals, len(ks))
+        run = lambda: jax.block_until_ready(
+            _packet_lanes(pw, k_lanes, s_lanes, m, ring))
+    else:
+        def run():
+            for k in ks_arr:
+                for s in s_vals:
+                    jax.block_until_ready(_packet_one(pw, k, s, m, ring))
+
+    out = run()                                           # compile
+    if mode == "fused":
+        assert np.asarray(out.ok).all()
+    best = np.inf
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return best / (len(ks) * len(s_props)) * 1e3
+
+
+def bench_grid(n_jobs: int, ks, s_props, nodes=100) -> dict:
+    wl = generate_workload(WorkloadParams(
+        n_jobs=n_jobs, nodes=nodes, load=0.9, homogeneous=True, seed=1))
+    pw = pack_workload(wl)
+    s = wl.init_time_for_proportion(s_props[0])
+    m = wl.params.nodes
+
+    ref_ms = _bench_sequential(simulate_packet_reference, pw, ks, s, m)
+    glog_ms = _bench_sequential(simulate_packet, pw, ks, s, m)
+    grid_ms = _bench_grid(wl, ks, s_props, "auto")
+    fused_ms = _bench_grid(wl, ks, s_props, "fused")
+    return {
+        "n_jobs": n_jobs, "nodes": nodes, "n_k": len(ks),
+        "n_s": len(s_props), "ring": resolve_ring(m, n_jobs),
+        "n_devices": jax.device_count(),
+        "reference_ms_per_experiment": ref_ms,
+        "group_log_ms_per_experiment": glog_ms,
+        "grid_auto_ms_per_experiment": grid_ms,
+        "fused_ms_per_experiment": fused_ms,
+        "speedup_group_log_vs_reference": ref_ms / glog_ms,
+        "speedup_grid_auto_vs_reference": ref_ms / grid_ms,
+        "speedup_fused_vs_reference": ref_ms / fused_ms,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes, finishes in <= 30 s")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        headline_n, scaling_ns = 1200, [300, 600, 1200]
+        ks = [0.5, 2.0, 8.0, 50.0]
+        s_props = [0.05, 0.5]
+    else:
+        headline_n, scaling_ns = 5000, [625, 1250, 2500, 5000]
+        ks = [0.5, 1.0, 2.0, 4.0, 8.0, 20.0, 50.0, 200.0]
+        s_props = [0.05, 0.2, 0.5]
+
+    t_start = time.perf_counter()
+    print(f"[bench_des] headline grid: {headline_n} jobs, "
+          f"{len(ks)} x {len(s_props)} experiments")
+    headline = bench_grid(headline_n, ks, s_props)
+    print(f"[bench_des]   reference  {headline['reference_ms_per_experiment']:8.1f} ms/exp")
+    print(f"[bench_des]   group_log  {headline['group_log_ms_per_experiment']:8.1f} ms/exp "
+          f"({headline['speedup_group_log_vs_reference']:.2f}x)")
+    print(f"[bench_des]   grid(auto) {headline['grid_auto_ms_per_experiment']:8.1f} ms/exp "
+          f"({headline['speedup_grid_auto_vs_reference']:.2f}x)")
+    print(f"[bench_des]   fused      {headline['fused_ms_per_experiment']:8.1f} ms/exp "
+          f"({headline['speedup_fused_vs_reference']:.2f}x, "
+          f"{headline['n_devices']} device(s))")
+
+    scaling = []
+    for n in scaling_ns:
+        row = bench_grid(n, ks[:4], s_props[:2])
+        scaling.append(row)
+        print(f"[bench_des] N={n:5d}: reference "
+              f"{row['reference_ms_per_experiment']:.1f} ms, group_log "
+              f"{row['group_log_ms_per_experiment']:.1f} ms "
+              f"({row['speedup_group_log_vs_reference']:.2f}x)")
+
+    out = {
+        "bench": "des_group_log_vs_reference",
+        "smoke": bool(args.smoke),
+        "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "platform": platform.platform(),
+        "unix_time": time.time(),
+        "total_seconds": None,          # filled below
+        "headline": headline,
+        "scaling_with_n": scaling,
+    }
+    out["total_seconds"] = time.perf_counter() - t_start
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[bench_des] wrote {BENCH_PATH} "
+          f"({out['total_seconds']:.1f}s total)")
+
+    target = 2.0
+    ok = headline["speedup_group_log_vs_reference"] >= target or \
+        headline["speedup_grid_auto_vs_reference"] >= target or \
+        headline["speedup_fused_vs_reference"] >= target
+    print(f"[bench_des] {'PASS' if ok else 'FAIL'}: >= {target}x lower "
+          f"ms/experiment than the seed path")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,7 +25,7 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0) -> dict:
     flows = paper_workloads(seed=seed)
     if n_jobs is not None:
         import dataclasses
-        from repro.workload.lublin import WorkloadParams, generate_workload
+        from repro.workload.lublin import generate_workload
         flows = {name: generate_workload(dataclasses.replace(
             wl.params, n_jobs=n_jobs)) for name, wl in flows.items()}
 
@@ -40,7 +40,7 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0) -> dict:
         out["workloads"][name] = {
             f: np.asarray(getattr(grid, f)).tolist()
             for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
-                      "useful_util", "n_groups", "ok")}
+                      "useful_util", "avg_run_wait", "n_groups", "ok")}
         out["timing"][name] = {"seconds": dt, "experiments": n_exp,
                                "sec_per_experiment": dt / n_exp}
         print(f"[paper_sweep] {name}: {n_exp} experiments in {dt:.1f}s "

@@ -3,17 +3,19 @@ algorithm) with scale-ratio tuning, as a fixed-shape JAX discrete-event
 simulation plus the pure policy functions reused by the ML-cluster layer."""
 from repro.core import packet
 from repro.core.des import (DesResult, PackedWorkload, pack_workload,
-                            simulate_packet, simulate_packet_host)
+                            resolve_ring, simulate_packet,
+                            simulate_packet_host, simulate_packet_reference)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.core.sweep import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
-                              plateau_threshold, run_baselines,
-                              run_packet_grid)
+                              lane_sharding, plateau_threshold,
+                              run_baselines, run_packet_grid)
 
 __all__ = [
     "packet", "DesResult", "PackedWorkload", "pack_workload",
-    "simulate_packet", "simulate_packet_host", "Metrics",
+    "resolve_ring", "simulate_packet", "simulate_packet_host",
+    "simulate_packet_reference", "Metrics",
     "efficiency_metrics", "simulate_backfill", "simulate_fcfs",
-    "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS", "plateau_threshold",
-    "run_baselines", "run_packet_grid",
+    "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS", "lane_sharding",
+    "plateau_threshold", "run_baselines", "run_packet_grid",
 ]

@@ -15,6 +15,33 @@ the whole simulator state is ~a dozen small arrays.
 
 Events: (a) job submission, (b) group completion (nodes released). On every
 event the greedy scheduling pass (paper Steps 1-5) runs until it is blocked.
+
+Complexity
+----------
+The event loop runs O(N) events and forms G <= N groups. The original
+("reference") implementation wrote per-job metrics eagerly: every group
+formation built an `in_grp` mask over all N jobs and did two masked [N]
+writes, so the whole simulation cost O(G * N) — dominated by metric
+bookkeeping, not scheduling.
+
+The production path (`simulate_packet`) instead keeps a bounded *group log*:
+forming a group appends one O(1) record
+
+    key = jtype * (N + 1) + tail_rank,  (t_start, m_grp, head_prefix_work)
+
+to a flat log of capacity N (every group drains >= 1 job, so G <= N). Inside
+a type, group tails are strictly increasing and partition [0, count_j), so a
+job of type j and rank r belongs to the type-j group with the smallest
+tail > r. One post-loop `argsort` of the log keys plus one vectorized
+`searchsorted` of each job's `jtype * (N + 1) + rank` recovers every job's
+group — and with it `start_t` and `run_start_t` — in O(N log N) total.
+
+Per-event work is therefore O(H + RING) (queue weights over H types plus the
+running-group ring), and the whole simulation is O(N * (H + RING) + N log N)
+instead of O(N * G). The ring itself is sized `min(M, N)` (every running
+group holds >= 1 node, so at most M run concurrently) rather than a fixed
+512, which cuts the loop-carried state ~5x for the paper's homogeneous
+M = 100 flows; see `resolve_ring`.
 """
 from __future__ import annotations
 
@@ -30,7 +57,24 @@ from repro.core import packet
 from repro.workload.lublin import Workload
 
 INF = jnp.inf
-RING = 512           # max concurrent groups; >= max nodes used in the paper
+RING = 512           # static fallback ring size (used when M is traced)
+
+
+def resolve_ring(m_nodes, n_jobs: int, ring: int | None = None) -> int:
+    """Ring size for the running-group buffer.
+
+    Every running group (or rigid job) holds at least one node, so at most
+    `min(M, N)` can run concurrently. When `m_nodes` is a concrete Python or
+    NumPy scalar we size the ring exactly; under tracing (e.g. M itself is a
+    vmap axis) we fall back to the static `RING` cap.
+    """
+    if ring is not None:
+        return max(1, int(ring))
+    try:
+        m = int(m_nodes)
+    except Exception:       # traced value — no concrete M at trace time
+        return max(1, min(RING, n_jobs)) if n_jobs else 1
+    return max(1, min(m, n_jobs if n_jobs else m))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,25 +112,40 @@ jax.tree_util.register_pytree_node(PackedWorkload, _pw_flatten, _pw_unflatten)
 
 
 def pack_workload(wl: Workload, dtype=jnp.float32) -> PackedWorkload:
+    """Build the per-type-indexed tables with numpy segment prefix sums.
+
+    A stable sort by type turns each type into one contiguous segment, so
+    per-type ranks and prefix work are plain offset arithmetic on one global
+    cumsum — no Python loop over jobs.
+    """
     H, N = wl.params.n_types, wl.n_jobs
+    jt = np.asarray(wl.jtype, np.int64)
+    w = np.asarray(wl.work, np.float64)
+    submit = np.asarray(wl.submit, np.float64)
+
+    order = np.argsort(jt, kind="stable")
+    jt_s = jt[order]
+    w_s = w[order]
+    counts = np.bincount(jt, minlength=H)
+    seg_start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(N)
+    rank_s = pos - seg_start[jt_s]                      # rank within type
+    cum = np.concatenate([[0.0], np.cumsum(w_s)])
+    cumw_s = cum[pos] - cum[seg_start[jt_s]]            # prefix work in type
+
     rank = np.zeros(N, np.int32)
     cumw = np.zeros(N, np.float64)
+    rank[order] = rank_s.astype(np.int32)
+    cumw[order] = cumw_s
+
     tj_submit = np.full((H, N), np.inf)
+    tj_submit[jt_s, rank_s] = submit[order]
     tj_prefw = np.zeros((H, N + 1), np.float64)
-    counts = np.zeros(H, np.int64)
-    acc = np.zeros(H, np.float64)
-    for i in range(N):
-        j = wl.jtype[i]
-        r = counts[j]
-        rank[i] = r
-        cumw[i] = acc[j]
-        tj_submit[j, r] = wl.submit[i]
-        acc[j] += wl.work[i]
-        tj_prefw[j, r + 1] = acc[j]
-        counts[j] += 1
+    tj_prefw[jt_s, rank_s + 1] = cumw_s + w_s
     # extend prefix sums into the padding so prefw[tail] is always valid
-    for j in range(H):
-        tj_prefw[j, counts[j] + 1:] = acc[j]
+    # (work >= 0 makes each row nondecreasing, so a running max fills pads)
+    tj_prefw = np.maximum.accumulate(tj_prefw, axis=1)
+
     f = lambda a: jnp.asarray(a, dtype)
     return PackedWorkload(
         submit=f(wl.submit), work=f(wl.work), jtype=jnp.asarray(wl.jtype, jnp.int32),
@@ -101,14 +160,16 @@ class DesState(NamedTuple):
     head: jnp.ndarray         # [H] per-type queue window start (rank)
     tail: jnp.ndarray         # [H] per-type queue window end (rank)
     m_free: jnp.ndarray       # free nodes
-    grp_end: jnp.ndarray      # [RING] completion time of running groups (+inf = free)
-    grp_m: jnp.ndarray        # [RING] nodes held
-    start_t: jnp.ndarray      # [N] group-start time per job (queue-time metric)
-    run_start_t: jnp.ndarray  # [N] job's own run start within its group
+    grp_end: jnp.ndarray      # [ring] completion time of running groups (+inf = free)
+    grp_m: jnp.ndarray        # [ring] nodes held
+    log_key: jnp.ndarray      # [N] group log: jtype * (N+1) + tail rank
+    log_t: jnp.ndarray        # [N] group start time
+    log_m: jnp.ndarray        # [N] group node count
+    log_headw: jnp.ndarray    # [N] per-type prefix work at group head
     qlen_int: jnp.ndarray     # integral of queue length over [0, t_last_submit]
     busy_ns: jnp.ndarray      # busy node-seconds within the metric window
     useful_ns: jnp.ndarray    # useful node-seconds within the metric window
-    n_groups: jnp.ndarray     # diagnostic: groups formed
+    n_groups: jnp.ndarray     # groups formed == next free log slot
     iters: jnp.ndarray        # diagnostic: outer loop iterations
 
 
@@ -128,10 +189,37 @@ def _window_overlap(a, b, t_end):
     return jnp.maximum(jnp.minimum(b, t_end) - jnp.minimum(a, t_end), 0.0)
 
 
+def _reconstruct_job_times(pw: PackedWorkload, st: DesState, s_j):
+    """Vectorized post-pass: job -> its group via per-type searchsorted.
+
+    Within a type, group tails strictly increase and partition that type's
+    ranks, so job (j, r) belongs to the type-j group with the smallest
+    tail > r. Encoding groups as `j * (N+1) + tail` and jobs as
+    `j * (N+1) + rank` makes that one global sorted lookup: tails are in
+    1..N so type blocks never interleave. Jobs never grouped (only possible
+    when the iteration cap was hit) keep start = +inf, which also keeps the
+    `ok` flag's all-finite check faithful.
+    """
+    N = pw.n_jobs
+    dtype = pw.submit.dtype
+    order = jnp.argsort(st.log_key)
+    skey = st.log_key[order]
+    q = pw.jtype * (N + 1) + pw.rank
+    ppos = jnp.searchsorted(skey, q, side="right")
+    g = order[jnp.minimum(ppos, N - 1)]
+    covered = (ppos < N) & (st.log_key[g] // (N + 1) == pw.jtype)
+    t0 = st.log_t[g]
+    m_g = jnp.maximum(st.log_m[g], 1).astype(dtype)
+    start_t = jnp.where(covered, t0, INF)
+    run_start = t0 + s_j[pw.jtype] + (pw.cumw - st.log_headw[g]) / m_g
+    run_start_t = jnp.where(covered, run_start, INF)
+    return start_t, run_start_t
+
+
 def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
-                    priority=None, t_max=None, max_iters: int | None = None
-                    ) -> DesResult:
-    """Run the Packet algorithm DES.
+                    priority=None, t_max=None, max_iters: int | None = None,
+                    ring: int | None = None) -> DesResult:
+    """Run the Packet algorithm DES (group-log event loop).
 
     Args:
       pw:      PackedWorkload (static shapes; close over for jit).
@@ -141,8 +229,10 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
                s_j = s_init for all j.
       m_nodes: cluster size M (traced scalar int).
       priority, t_max: optional [H] job-type priorities / wait normalizers.
+      ring:    running-group buffer size; default `resolve_ring(m_nodes, N)`.
     """
     H, N = pw.n_types, pw.n_jobs
+    ring = resolve_ring(m_nodes, N, ring)
     dtype = pw.submit.dtype
     k = jnp.asarray(k, dtype)
     s_init = jnp.asarray(s_init, dtype)
@@ -156,6 +246,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
 
     t_end_metric = pw.t_last_submit
     type_ids = jnp.arange(H)
+    key_pad = jnp.iinfo(jnp.int32).max     # unused log slots sort last
 
     def sched_cond(carry):
         st = carry
@@ -176,13 +267,9 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         slot = jnp.argmax(jnp.isinf(st.grp_end))
         t_fin = st.t + dur
 
-        # per-job metric writes for every job in the drained queue window
-        in_grp = ((pw.jtype == j) & (pw.rank >= st.head[j]) &
-                  (pw.rank < st.tail[j]))
-        start_t = jnp.where(in_grp, st.t, st.start_t)
+        # O(1) group-log append; job times reconstructed after the loop
+        gslot = jnp.minimum(st.n_groups, N - 1)
         head_w = pw.tj_prefw[j, st.head[j]]
-        run_start = st.t + s_j[j] + (pw.cumw - head_w) / m_grp.astype(dtype)
-        run_start_t = jnp.where(in_grp, run_start, st.run_start_t)
 
         busy = st.busy_ns + m_grp.astype(dtype) * _window_overlap(
             st.t, t_fin, t_end_metric)
@@ -194,7 +281,10 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
             m_free=st.m_free - m_grp,
             grp_end=st.grp_end.at[slot].set(t_fin),
             grp_m=st.grp_m.at[slot].set(m_grp),
-            start_t=start_t, run_start_t=run_start_t,
+            log_key=st.log_key.at[gslot].set(j * (N + 1) + st.tail[j]),
+            log_t=st.log_t.at[gslot].set(st.t),
+            log_m=st.log_m.at[gslot].set(m_grp),
+            log_headw=st.log_headw.at[gslot].set(head_w),
             busy_ns=busy, useful_ns=useful,
             n_groups=st.n_groups + 1)
 
@@ -232,6 +322,139 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
     st0 = DesState(
         t=jnp.zeros((), dtype), next_sub=jnp.zeros((), jnp.int32),
         head=jnp.zeros((H,), jnp.int32), tail=jnp.zeros((H,), jnp.int32),
+        m_free=m_nodes, grp_end=jnp.full((ring,), INF, dtype),
+        grp_m=jnp.zeros((ring,), jnp.int32),
+        log_key=jnp.full((N,), key_pad, jnp.int32),
+        log_t=jnp.zeros((N,), dtype), log_m=jnp.zeros((N,), jnp.int32),
+        log_headw=jnp.zeros((N,), dtype),
+        qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
+        useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32),
+        iters=jnp.zeros((), jnp.int32))
+
+    st = jax.lax.while_loop(cond, body, st0)
+    start_t, run_start_t = _reconstruct_job_times(pw, st, s_j)
+    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
+        jnp.all(st.head == st.tail) & jnp.all(jnp.isfinite(start_t))
+    return DesResult(start_t=start_t, run_start_t=run_start_t,
+                     qlen_int=st.qlen_int, busy_ns=st.busy_ns,
+                     useful_ns=st.useful_ns, n_groups=st.n_groups,
+                     makespan=st.t, ok=ok)
+
+
+# --------------------------------------------------------------------------
+# Reference implementation: the original O(N)-masked-writes event body.
+# Retained verbatim (fixed RING ring, eager per-job writes) as the oracle
+# for the equivalence test suite and the baseline for benchmarks/bench_des.
+# --------------------------------------------------------------------------
+
+class _RefState(NamedTuple):
+    t: jnp.ndarray
+    next_sub: jnp.ndarray
+    head: jnp.ndarray
+    tail: jnp.ndarray
+    m_free: jnp.ndarray
+    grp_end: jnp.ndarray
+    grp_m: jnp.ndarray
+    start_t: jnp.ndarray      # [N] written eagerly per group — O(N)/event
+    run_start_t: jnp.ndarray  # [N]
+    qlen_int: jnp.ndarray
+    busy_ns: jnp.ndarray
+    useful_ns: jnp.ndarray
+    n_groups: jnp.ndarray
+    iters: jnp.ndarray
+
+
+def simulate_packet_reference(pw: PackedWorkload, k, s_init, m_nodes,
+                              priority=None, t_max=None,
+                              max_iters: int | None = None) -> DesResult:
+    """Seed-equivalent Packet DES with per-event O(N) metric writes."""
+    H, N = pw.n_types, pw.n_jobs
+    dtype = pw.submit.dtype
+    k = jnp.asarray(k, dtype)
+    s_init = jnp.asarray(s_init, dtype)
+    m_nodes = jnp.asarray(m_nodes, jnp.int32)
+    s_j = jnp.full((H,), s_init, dtype)
+    p_j = jnp.ones((H,), dtype) if priority is None else jnp.asarray(priority, dtype)
+    tmax_j = (jnp.full((H,), 3600.0, dtype) if t_max is None
+              else jnp.asarray(t_max, dtype))
+    if max_iters is None:
+        max_iters = 4 * N + 64
+
+    t_end_metric = pw.t_last_submit
+    type_ids = jnp.arange(H)
+
+    def sched_cond(st):
+        nonempty = st.tail > st.head
+        free_slot = jnp.any(jnp.isinf(st.grp_end))
+        return (st.m_free > 0) & jnp.any(nonempty) & free_slot
+
+    def sched_body(st: _RefState) -> _RefState:
+        nonempty = st.tail > st.head
+        sum_w = (pw.tj_prefw[type_ids, st.tail] -
+                 pw.tj_prefw[type_ids, st.head])
+        oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
+        w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j, nonempty)
+        j = jnp.argmax(w)
+        work = sum_w[j]
+        m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)
+        dur = packet.group_duration(work, s_j[j], m_grp)
+        slot = jnp.argmax(jnp.isinf(st.grp_end))
+        t_fin = st.t + dur
+
+        in_grp = ((pw.jtype == j) & (pw.rank >= st.head[j]) &
+                  (pw.rank < st.tail[j]))
+        start_t = jnp.where(in_grp, st.t, st.start_t)
+        head_w = pw.tj_prefw[j, st.head[j]]
+        run_start = st.t + s_j[j] + (pw.cumw - head_w) / m_grp.astype(dtype)
+        run_start_t = jnp.where(in_grp, run_start, st.run_start_t)
+
+        busy = st.busy_ns + m_grp.astype(dtype) * _window_overlap(
+            st.t, t_fin, t_end_metric)
+        useful = st.useful_ns + m_grp.astype(dtype) * _window_overlap(
+            st.t + s_j[j], t_fin, t_end_metric)
+
+        return st._replace(
+            head=st.head.at[j].set(st.tail[j]),
+            m_free=st.m_free - m_grp,
+            grp_end=st.grp_end.at[slot].set(t_fin),
+            grp_m=st.grp_m.at[slot].set(m_grp),
+            start_t=start_t, run_start_t=run_start_t,
+            busy_ns=busy, useful_ns=useful,
+            n_groups=st.n_groups + 1)
+
+    def cond(st: _RefState):
+        more = (st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end))
+        return more & (st.iters < max_iters)
+
+    def body(st: _RefState) -> _RefState:
+        t_sub = jnp.where(st.next_sub < N,
+                          pw.submit[jnp.minimum(st.next_sub, N - 1)], INF)
+        slot = jnp.argmin(st.grp_end)
+        t_fin = st.grp_end[slot]
+        take_sub = t_sub <= t_fin
+        t_new = jnp.where(take_sub, t_sub, t_fin)
+
+        qlen = jnp.sum(st.tail - st.head).astype(st.t.dtype)
+        qint = st.qlen_int + qlen * _window_overlap(st.t, t_new, t_end_metric)
+
+        def on_submit(st):
+            j = pw.jtype[jnp.minimum(st.next_sub, N - 1)]
+            return st._replace(next_sub=st.next_sub + 1,
+                               tail=st.tail.at[j].add(1))
+
+        def on_finish(st):
+            return st._replace(m_free=st.m_free + st.grp_m[slot],
+                               grp_end=st.grp_end.at[slot].set(INF),
+                               grp_m=st.grp_m.at[slot].set(0))
+
+        st = st._replace(t=t_new, qlen_int=qint)
+        st = jax.lax.cond(take_sub, on_submit, on_finish, st)
+        st = jax.lax.while_loop(sched_cond, sched_body, st)
+        return st._replace(iters=st.iters + 1)
+
+    st0 = _RefState(
+        t=jnp.zeros((), dtype), next_sub=jnp.zeros((), jnp.int32),
+        head=jnp.zeros((H,), jnp.int32), tail=jnp.zeros((H,), jnp.int32),
         m_free=m_nodes, grp_end=jnp.full((RING,), INF, dtype),
         grp_m=jnp.zeros((RING,), jnp.int32),
         start_t=jnp.full((N,), INF, dtype), run_start_t=jnp.full((N,), INF, dtype),
@@ -248,9 +471,10 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
                      makespan=st.t, ok=ok)
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
-def _simulate_packet_jit(pw, k, s_init, m_nodes, max_iters=None):
-    return simulate_packet(pw, k, s_init, m_nodes, max_iters=max_iters)
+@partial(jax.jit, static_argnames=("max_iters", "ring"))
+def _simulate_packet_jit(pw, k, s_init, m_nodes, max_iters=None, ring=None):
+    return simulate_packet(pw, k, s_init, m_nodes, max_iters=max_iters,
+                           ring=ring)
 
 
 def simulate_packet_host(wl: Workload, k: float, s_prop: float,

@@ -6,6 +6,14 @@ JMS use. We implement both baselines on the *rigid* view of the workload
 (each job runs alone on its requested n_i nodes for s + e_i seconds, paying
 its own initialization), with the same fixed-shape `lax.while_loop` DES
 skeleton as `repro.core.des` so results are directly comparable.
+
+Per-event cost mirrors the group-log DES: the skeleton's queue-length
+integral uses the scalar identity `waiting = next_sub - n_started` (no [N]
+mask sum per event), FCFS walks a head pointer (jobs start strictly in
+submit order, so the head is a monotone scalar — O(1) per started job
+instead of an O(N) argmax), and the running-job ring is sized
+`resolve_ring(M, N)` instead of a fixed 512. Backfill still scans the
+waiting mask once per pass: its candidate set is inherently order-breaking.
 """
 from __future__ import annotations
 
@@ -14,17 +22,18 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.des import (DesResult, PackedWorkload, RING, _window_overlap,
-                            INF)
+from repro.core.des import (DesResult, PackedWorkload, _window_overlap,
+                            INF, resolve_ring)
 
 
 class _BaseState(NamedTuple):
     t: jnp.ndarray
     next_sub: jnp.ndarray
+    head_ptr: jnp.ndarray     # first never-started job index (monotone)
     started: jnp.ndarray      # [N] bool (submitted jobs that began running)
     m_free: jnp.ndarray
-    grp_end: jnp.ndarray      # [RING]
-    grp_m: jnp.ndarray        # [RING]
+    grp_end: jnp.ndarray      # [ring]
+    grp_m: jnp.ndarray        # [ring]
     start_t: jnp.ndarray      # [N]
     qlen_int: jnp.ndarray
     busy_ns: jnp.ndarray
@@ -54,12 +63,11 @@ def _start_job(st: _BaseState, i, s_init, runtime, nodes, t_end_metric):
 
 
 def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
-                    max_iters):
+                    max_iters, ring):
     """Shared submit/finish event loop around a scheduling pass."""
     N = pw.n_jobs
     dtype = pw.submit.dtype
     t_end_metric = pw.t_last_submit
-    idx = jnp.arange(N)
 
     def cond(st: _BaseState):
         more = (st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end))
@@ -73,9 +81,9 @@ def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
         take_sub = t_sub <= t_fin
         t_new = jnp.where(take_sub, t_sub, t_fin)
 
-        waiting = (idx < st.next_sub) & ~st.started
-        qint = st.qlen_int + waiting.sum().astype(dtype) * _window_overlap(
-            st.t, t_new, t_end_metric)
+        # waiting jobs = submitted minus started, as a scalar counter
+        n_wait = (st.next_sub - st.n_started).astype(dtype)
+        qint = st.qlen_int + n_wait * _window_overlap(st.t, t_new, t_end_metric)
         st = st._replace(t=t_new, qlen_int=qint)
 
         st = jax.lax.cond(
@@ -90,9 +98,10 @@ def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
 
     st0 = _BaseState(
         t=jnp.zeros((), dtype), next_sub=jnp.zeros((), jnp.int32),
+        head_ptr=jnp.zeros((), jnp.int32),
         started=jnp.zeros((N,), bool), m_free=jnp.asarray(m_nodes, jnp.int32),
-        grp_end=jnp.full((RING,), INF, dtype),
-        grp_m=jnp.zeros((RING,), jnp.int32),
+        grp_end=jnp.full((ring,), INF, dtype),
+        grp_m=jnp.zeros((ring,), jnp.int32),
         start_t=jnp.full((N,), INF, dtype),
         qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
         useful_ns=jnp.zeros((), dtype), n_started=jnp.zeros((), jnp.int32),
@@ -108,35 +117,40 @@ def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
 
 
 def simulate_fcfs(pw: PackedWorkload, s_init, m_nodes,
-                  max_iters: int | None = None) -> DesResult:
-    """Strict FCFS: the head of the queue blocks everything behind it."""
+                  max_iters: int | None = None,
+                  ring: int | None = None) -> DesResult:
+    """Strict FCFS: the head of the queue blocks everything behind it.
+
+    FCFS starts jobs exactly in submit order, so `head_ptr` IS the head of
+    the queue — the scheduling pass is O(1) per started job.
+    """
     N = pw.n_jobs
     s_init = jnp.asarray(s_init, pw.submit.dtype)
-    idx = jnp.arange(N)
+    ring = resolve_ring(m_nodes, N, ring)
     if max_iters is None:
         max_iters = 4 * N + 64
 
     def sched_pass(st: _BaseState):
         def cond(st):
-            waiting = (idx < st.next_sub) & ~st.started
-            head = jnp.argmax(waiting)
-            fits = jnp.any(waiting) & (pw.nodes[head] <= st.m_free)
+            i = jnp.minimum(st.head_ptr, N - 1)
+            fits = (st.head_ptr < st.next_sub) & (pw.nodes[i] <= st.m_free)
             return fits & jnp.any(jnp.isinf(st.grp_end))
 
         def body(st):
-            waiting = (idx < st.next_sub) & ~st.started
-            head = jnp.argmax(waiting)
-            return _start_job(st, head, s_init, pw.runtime, pw.nodes,
-                              pw.t_last_submit)
+            i = jnp.minimum(st.head_ptr, N - 1)
+            st = _start_job(st, i, s_init, pw.runtime, pw.nodes,
+                            pw.t_last_submit)
+            return st._replace(head_ptr=st.head_ptr + 1)
 
         return jax.lax.while_loop(cond, body, st)
 
-    return _event_skeleton(pw, s_init, m_nodes, sched_pass, max_iters)
+    return _event_skeleton(pw, s_init, m_nodes, sched_pass, max_iters, ring)
 
 
 def simulate_backfill(pw: PackedWorkload, s_init, m_nodes,
                       backfill_depth: int = 64,
-                      max_iters: int | None = None) -> DesResult:
+                      max_iters: int | None = None,
+                      ring: int | None = None) -> DesResult:
     """Conservative EASY backfill.
 
     The head job gets a reservation at the *shadow time* (earliest instant
@@ -148,6 +162,7 @@ def simulate_backfill(pw: PackedWorkload, s_init, m_nodes,
     N = pw.n_jobs
     dtype = pw.submit.dtype
     s_init = jnp.asarray(s_init, dtype)
+    ring = resolve_ring(m_nodes, N, ring)
     idx = jnp.arange(N)
     if max_iters is None:
         max_iters = 4 * N + 64
@@ -205,4 +220,4 @@ def simulate_backfill(pw: PackedWorkload, s_init, m_nodes,
 
         return jax.lax.fori_loop(0, backfill_depth, bf_body, st)
 
-    return _event_skeleton(pw, s_init, m_nodes, sched_pass, max_iters)
+    return _event_skeleton(pw, s_init, m_nodes, sched_pass, max_iters, ring)

@@ -1,0 +1,12 @@
+"""Version-compat shims for the Pallas TPU API."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 exposes this as TPUCompilerParams, newer versions as
+# CompilerParams; fail loudly at import time if neither exists.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - future-jax guard
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels._compat for this jax "
+        "version")

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 DEFAULT_CHUNK = 128
 DEFAULT_BD = 256
 
@@ -101,7 +103,7 @@ def lru_chunked(log_a, b, h0=None, *, chunk: int = DEFAULT_CHUNK,
             jax.ShapeDtypeStruct((B, Dp), b.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(log_a, b, h0)

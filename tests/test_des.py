@@ -1,26 +1,19 @@
-"""Behaviour + property tests for the Packet DES and baseline schedulers."""
+"""Behaviour tests for the Packet DES and baseline schedulers.
+
+Property-based tests live in ``test_des_properties.py`` behind an optional
+``hypothesis`` dev dependency; this module must import cleanly in a minimal
+environment so tier-1 collection never fails.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (efficiency_metrics, pack_workload, simulate_backfill,
                         simulate_fcfs, simulate_packet)
 from repro.workload.lublin import Workload, WorkloadParams, generate_workload
 
-
-def _mk_workload(submit, runtime, nodes, jtype, n_types, m_nodes):
-    submit = np.asarray(submit, np.float64)
-    runtime = np.asarray(runtime, np.float64)
-    nodes = np.asarray(nodes, np.int64)
-    jtype = np.asarray(jtype, np.int64)
-    order = np.argsort(submit, kind="stable")
-    p = WorkloadParams(n_jobs=len(submit), nodes=m_nodes, n_types=n_types,
-                       horizon=float(submit.max()) if len(submit) else 1.0)
-    return Workload(submit=submit[order], runtime=runtime[order],
-                    nodes=nodes[order], work=(runtime * nodes)[order],
-                    jtype=jtype[order], params=p)
+from conftest import make_workload as _mk_workload
 
 
 class TestPacketHandConstructed:
@@ -108,74 +101,6 @@ class TestFcfsBackfill:
         b = simulate_backfill(pw, 0.0, 5)
         assert float(b.start_t[2]) == pytest.approx(2.0)  # used extra node
         assert float(b.start_t[1]) <= float(f.start_t[1]) + 1e-5
-
-
-@st.composite
-def tiny_workloads(draw):
-    n = draw(st.integers(3, 24))
-    h = draw(st.integers(1, 4))
-    m = draw(st.integers(2, 16))
-    submit = sorted(draw(st.lists(
-        st.floats(0, 1e4, allow_nan=False, allow_infinity=False),
-        min_size=n, max_size=n)))
-    runtime = draw(st.lists(st.floats(1, 1e3), min_size=n, max_size=n))
-    nodes = draw(st.lists(st.integers(1, m), min_size=n, max_size=n))
-    jtype = draw(st.lists(st.integers(0, h - 1), min_size=n, max_size=n))
-    return _mk_workload(submit, runtime, nodes, jtype, h, m)
-
-
-class TestProperties:
-    @settings(max_examples=25, deadline=None)
-    @given(tiny_workloads(), st.floats(0.1, 100.0), st.floats(0.1, 0.6))
-    def test_packet_invariants(self, wl, k, s_prop):
-        pw = pack_workload(wl, jnp.float32)
-        s = max(wl.init_time_for_proportion(s_prop), 1e-3)
-        res = simulate_packet(pw, k, s, wl.params.nodes)
-        res = jax.tree.map(np.asarray, res)
-        assert res.ok, "simulation must drain"
-        # every job starts, never before its submit
-        assert np.all(np.isfinite(res.start_t))
-        assert np.all(res.start_t >= np.asarray(pw.submit) - 1e-3)
-        # a job's own run begins >= group start + init
-        assert np.all(res.run_start_t >= res.start_t + s - 1e-2)
-        # useful node-seconds within window can never exceed busy ones
-        assert res.useful_ns <= res.busy_ns + 1e-3
-        # utilization bounds
-        window = float(pw.t_last_submit)
-        if window > 0:
-            assert res.busy_ns <= wl.params.nodes * window * (1 + 1e-5)
-
-    @settings(max_examples=25, deadline=None)
-    @given(tiny_workloads(), st.floats(0.0, 100.0))
-    def test_baseline_invariants(self, wl, s):
-        pw = pack_workload(wl, jnp.float32)
-        for sim in (simulate_fcfs, simulate_backfill):
-            res = jax.tree.map(np.asarray, sim(pw, s, wl.params.nodes))
-            assert res.ok
-            assert np.all(res.start_t >= np.asarray(pw.submit) - 1e-3)
-            assert int(res.n_groups) == wl.n_jobs  # no grouping in baselines
-
-    @settings(max_examples=15, deadline=None)
-    @given(tiny_workloads(), st.floats(0.2, 50.0))
-    def test_work_conservation(self, wl, k):
-        """Useful node-seconds over an infinite window == total work,
-        independent of the scheduler (nothing is lost or duplicated)."""
-        # use a workload whose metric window covers the whole run by
-        # appending a far-future sentinel job
-        import dataclasses
-        far = wl.submit.max() + 1e7
-        wl2 = _mk_workload(
-            np.concatenate([wl.submit, [far]]),
-            np.concatenate([wl.runtime, [1.0]]),
-            np.concatenate([wl.nodes, [1]]),
-            np.concatenate([wl.jtype, [0]]),
-            wl.params.n_types, wl.params.nodes)
-        pw = pack_workload(wl2, jnp.float32)
-        res = jax.tree.map(np.asarray, simulate_packet(pw, k, 5.0, wl2.params.nodes))
-        assert res.ok
-        # all but the sentinel's work is inside the window
-        total_work = wl.work.sum()
-        assert res.useful_ns == pytest.approx(total_work, rel=2e-2)
 
 
 class TestMetrics:

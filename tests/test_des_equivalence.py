@@ -1,0 +1,147 @@
+"""Equivalence suite: group-log DES == seed implementation, fused sweep ==
+per-experiment calls.
+
+The group-log rewrite (`simulate_packet`) changes how per-job start times
+are produced (O(1) log appends + a vectorized post-pass) but must not change
+a single metric. `simulate_packet_reference` is the seed implementation kept
+verbatim as the oracle; these tests pin every DesResult field against it on
+hand-constructed cases and on reduced Lublin workloads across the (k, s)
+grid, and pin the fused (k x S) sweep engine against individual
+`simulate_packet` calls.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (efficiency_metrics, pack_workload, resolve_ring,
+                        run_packet_grid, simulate_packet,
+                        simulate_packet_reference)
+from repro.workload.lublin import WorkloadParams, generate_workload
+
+from conftest import make_workload
+
+
+def assert_des_equal(a, b, rtol=1e-6, atol=1e-6):
+    a = jax.tree.map(np.asarray, a)
+    b = jax.tree.map(np.asarray, b)
+    for f in a._fields:
+        np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                   rtol=rtol, atol=atol, err_msg=f)
+
+
+HAND_CASES = [
+    # (submit, runtime, nodes, jtype, n_types, M, k, s)
+    ([0.0], [100.0], [1], [0], 2, 10, 1.0, 50.0),
+    # sequential groups of one type on one node
+    ([0.0, 1.0, 2.0], [100.0, 40.0, 60.0], [1, 1, 1], [0, 0, 0], 1, 1,
+     1000.0, 10.0),
+    # paper Fig 3 geometry
+    ([0.0, 0.0], [120.0, 120.0], [1, 1], [0, 0], 1, 100, 0.5, 60.0),
+    # two types compete for nodes
+    ([0.0, 0.0, 5.0, 6.0], [50.0, 80.0, 30.0, 20.0], [1, 1, 1, 1],
+     [0, 1, 0, 1], 2, 4, 2.0, 15.0),
+    # starvation of free nodes (m_free clamp)
+    ([0.0], [100.0], [1], [0], 1, 2, 0.1, 10.0),
+    # many tiny jobs of one popular type + a rare type
+    ([float(i) for i in range(12)], [10.0] * 12, [1] * 12,
+     [0, 0, 0, 1, 0, 0, 0, 0, 1, 0, 0, 0], 2, 6, 4.0, 8.0),
+]
+
+
+class TestGroupLogEquivalence:
+    @pytest.mark.parametrize("case", HAND_CASES)
+    def test_hand_constructed(self, case):
+        submit, runtime, nodes, jtype, h, m, k, s = case
+        wl = make_workload(submit, runtime, nodes, jtype, h, m)
+        pw = pack_workload(wl)
+        assert_des_equal(simulate_packet(pw, k, s, m),
+                         simulate_packet_reference(pw, k, s, m))
+
+    @pytest.mark.parametrize("k", [0.3, 2.0, 20.0, 500.0])
+    @pytest.mark.parametrize("s_prop", [0.05, 0.3, 0.5])
+    def test_reduced_lublin_grid(self, small_workload, k, s_prop):
+        pw = pack_workload(small_workload)
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(s_prop)
+        assert_des_equal(simulate_packet(pw, k, s, m),
+                         simulate_packet_reference(pw, k, s, m))
+
+    def test_hetero_workload(self, hetero_workload):
+        pw = pack_workload(hetero_workload)
+        m = hetero_workload.params.nodes
+        s = hetero_workload.init_time_for_proportion(0.2)
+        for k in (0.5, 8.0, 100.0):
+            assert_des_equal(simulate_packet(pw, k, s, m),
+                             simulate_packet_reference(pw, k, s, m))
+
+    def test_ring_size_does_not_change_results(self, small_workload):
+        """The derived ring is a capacity, not a policy: any ring large
+        enough to hold the concurrent groups yields identical results."""
+        pw = pack_workload(small_workload)
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(0.3)
+        small = simulate_packet(pw, 2.0, s, m)          # ring = min(M, N)
+        big = simulate_packet(pw, 2.0, s, m, ring=512)  # seed's fixed ring
+        assert resolve_ring(m, pw.n_jobs) == min(m, pw.n_jobs)
+        assert_des_equal(small, big)
+
+    def test_priorities_preserved(self, small_workload):
+        """The group-log path must honour priority/t_max like the seed."""
+        pw = pack_workload(small_workload)
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(0.3)
+        h = pw.n_types
+        pri = np.linspace(2.0, 0.5, h)
+        tmx = np.full(h, 600.0)
+        assert_des_equal(
+            simulate_packet(pw, 4.0, s, m, priority=pri, t_max=tmx),
+            simulate_packet_reference(pw, 4.0, s, m, priority=pri, t_max=tmx))
+
+
+class TestFusedSweepEquivalence:
+    def test_fused_grid_matches_per_experiment(self, small_workload):
+        """The fused (k x S) lane engine == one simulate_packet per cell."""
+        wl = small_workload
+        ks = [0.5, 2.0, 8.0, 50.0, 300.0]
+        s_props = [0.05, 0.2, 0.5]
+        grid = run_packet_grid(wl, ks=ks, s_props=s_props, mode="fused")
+        pw = pack_workload(wl)
+        m = wl.params.nodes
+        for i, k in enumerate(ks):
+            for j, p in enumerate(s_props):
+                s = wl.init_time_for_proportion(p)
+                res = simulate_packet(pw, k, s, m)
+                cell = efficiency_metrics(pw.submit, res, m, pw.t_last_submit)
+                cell = jax.tree.map(np.asarray, cell)
+                for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
+                          "useful_util", "n_groups", "ok"):
+                    np.testing.assert_allclose(
+                        np.asarray(getattr(grid, f))[i, j], getattr(cell, f),
+                        rtol=1e-5, atol=1e-5, err_msg=f"{f} k={k} s={p}")
+        assert np.asarray(grid.ok).all()
+
+    def test_all_modes_agree(self, small_workload):
+        """seq / fused / vmap_k / vmap_s are dispatch layouts, not policies."""
+        kw = dict(ks=[0.5, 8.0, 100.0], s_props=[0.05, 0.5])
+        grids = {
+            "seq": run_packet_grid(small_workload, mode="seq", **kw),
+            "fused": run_packet_grid(small_workload, mode="fused", **kw),
+            "vmap_k": run_packet_grid(small_workload, vmap_k=True, **kw),
+            "vmap_s": run_packet_grid(small_workload, vmap_s=True, **kw),
+        }
+        base = grids.pop("seq")
+        for name, g in grids.items():
+            for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
+                      "useful_util", "avg_run_wait"):
+                np.testing.assert_allclose(
+                    getattr(base, f), getattr(g, f), rtol=1e-5,
+                    err_msg=f"{name}:{f}")
+
+    @pytest.mark.slow
+    def test_fused_grid_full_s_axis(self, small_workload):
+        """Full paper init-proportion axis through the fused engine."""
+        from repro.core import PAPER_INIT_PROPS
+        grid = run_packet_grid(small_workload, ks=[1.0, 10.0],
+                               s_props=PAPER_INIT_PROPS)
+        assert np.asarray(grid.ok).all()
+        assert np.asarray(grid.avg_wait).shape == (2, len(PAPER_INIT_PROPS))

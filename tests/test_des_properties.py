@@ -1,0 +1,101 @@
+"""Property-based tests for the Packet DES and baseline schedulers.
+
+Requires the optional ``hypothesis`` dev dependency (``pip install
+hypothesis``); the whole module is skipped when it is absent so tier-1
+collection never fails in a minimal environment.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (pack_workload, simulate_backfill, simulate_fcfs,  # noqa: E402
+                        simulate_packet, simulate_packet_reference)
+
+from conftest import make_workload as _mk_workload  # noqa: E402
+
+
+@st.composite
+def tiny_workloads(draw):
+    n = draw(st.integers(3, 24))
+    h = draw(st.integers(1, 4))
+    m = draw(st.integers(2, 16))
+    submit = sorted(draw(st.lists(
+        st.floats(0, 1e4, allow_nan=False, allow_infinity=False),
+        min_size=n, max_size=n)))
+    runtime = draw(st.lists(st.floats(1, 1e3), min_size=n, max_size=n))
+    nodes = draw(st.lists(st.integers(1, m), min_size=n, max_size=n))
+    jtype = draw(st.lists(st.integers(0, h - 1), min_size=n, max_size=n))
+    return _mk_workload(submit, runtime, nodes, jtype, h, m)
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(tiny_workloads(), st.floats(0.1, 100.0), st.floats(0.1, 0.6))
+    def test_packet_invariants(self, wl, k, s_prop):
+        pw = pack_workload(wl, jnp.float32)
+        s = max(wl.init_time_for_proportion(s_prop), 1e-3)
+        res = simulate_packet(pw, k, s, wl.params.nodes)
+        res = jax.tree.map(np.asarray, res)
+        assert res.ok, "simulation must drain"
+        # every job starts, never before its submit
+        assert np.all(np.isfinite(res.start_t))
+        assert np.all(res.start_t >= np.asarray(pw.submit) - 1e-3)
+        # a job's own run begins >= group start + init
+        assert np.all(res.run_start_t >= res.start_t + s - 1e-2)
+        # useful node-seconds within window can never exceed busy ones
+        assert res.useful_ns <= res.busy_ns + 1e-3
+        # utilization bounds
+        window = float(pw.t_last_submit)
+        if window > 0:
+            assert res.busy_ns <= wl.params.nodes * window * (1 + 1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(tiny_workloads(), st.floats(0.1, 100.0), st.floats(0.1, 0.6))
+    def test_packet_matches_reference(self, wl, k, s_prop):
+        """The group-log DES agrees with the seed O(N)-writes oracle on
+        arbitrary tiny workloads (the random-case arm of the equivalence
+        suite in test_des_equivalence.py)."""
+        pw = pack_workload(wl, jnp.float32)
+        s = max(wl.init_time_for_proportion(s_prop), 1e-3)
+        a = jax.tree.map(np.asarray, simulate_packet(pw, k, s, wl.params.nodes))
+        b = jax.tree.map(np.asarray,
+                         simulate_packet_reference(pw, k, s, wl.params.nodes))
+        for f in a._fields:
+            np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                       rtol=1e-6, atol=1e-6, err_msg=f)
+
+    @settings(max_examples=25, deadline=None)
+    @given(tiny_workloads(), st.floats(0.0, 100.0))
+    def test_baseline_invariants(self, wl, s):
+        pw = pack_workload(wl, jnp.float32)
+        for sim in (simulate_fcfs, simulate_backfill):
+            res = jax.tree.map(np.asarray, sim(pw, s, wl.params.nodes))
+            assert res.ok
+            assert np.all(res.start_t >= np.asarray(pw.submit) - 1e-3)
+            assert int(res.n_groups) == wl.n_jobs  # no grouping in baselines
+
+    @settings(max_examples=15, deadline=None)
+    @given(tiny_workloads(), st.floats(0.2, 50.0))
+    def test_work_conservation(self, wl, k):
+        """Useful node-seconds over an infinite window == total work,
+        independent of the scheduler (nothing is lost or duplicated)."""
+        # use a workload whose metric window covers the whole run by
+        # appending a far-future sentinel job
+        far = wl.submit.max() + 1e7
+        wl2 = _mk_workload(
+            np.concatenate([wl.submit, [far]]),
+            np.concatenate([wl.runtime, [1.0]]),
+            np.concatenate([wl.nodes, [1]]),
+            np.concatenate([wl.jtype, [0]]),
+            wl.params.n_types, wl.params.nodes)
+        pw = pack_workload(wl2, jnp.float32)
+        res = jax.tree.map(np.asarray, simulate_packet(pw, k, 5.0, wl2.params.nodes))
+        assert res.ok
+        # all but the sentinel's work is inside the window
+        total_work = wl.work.sum()
+        assert res.useful_ns == pytest.approx(total_work, rel=2e-2)

@@ -1,10 +1,13 @@
 """Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles,
-executed in interpret mode on CPU (the kernels target TPU)."""
+executed in interpret mode on CPU (the kernels target TPU).
+
+Property-based sweeps live in ``test_kernels_properties.py`` behind the
+optional ``hypothesis`` dev dependency.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -56,23 +59,6 @@ def test_flash_attention_softcap():
                                rtol=2e-5, atol=2e-5)
 
 
-@settings(max_examples=10, deadline=None)
-@given(sq=st.integers(8, 96), skv_extra=st.integers(0, 64),
-       h=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
-       hd=st.sampled_from([16, 32]))
-def test_flash_attention_property(sq, skv_extra, h, g, hd):
-    """Property: any (Sq, Skv>=Sq, H=KV*g, hd) agrees with the oracle."""
-    skv = sq + skv_extra
-    ks = jax.random.split(jax.random.PRNGKey(sq * 131 + skv), 3)
-    q = jax.random.normal(ks[0], (1, sq, h * g, hd))
-    k = jax.random.normal(ks[1], (1, skv, h, hd))
-    v = jax.random.normal(ks[2], (1, skv, h, hd))
-    out = flash_attention(q, k, v, bq=32, bkv=32)
-    ref = attention_ref(q, k, v)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=3e-5, atol=3e-5)
-
-
 # ------------------------------------------------------------ rglru scan
 
 LRU_CASES = [
@@ -96,20 +82,6 @@ def test_lru_chunked_matches_ref(case):
     np.testing.assert_allclose(np.asarray(h), np.asarray(href),
                                rtol=2e-4, atol=2e-5)
     np.testing.assert_allclose(np.asarray(hlast), np.asarray(hlast_ref),
-                               rtol=2e-4, atol=2e-5)
-
-
-@settings(max_examples=10, deadline=None)
-@given(s=st.integers(4, 80), d=st.integers(1, 200),
-       chunk=st.sampled_from([8, 16, 32]))
-def test_lru_property(s, d, chunk):
-    """Property: chunked == associative-scan for arbitrary S, D, chunk."""
-    ks = jax.random.split(jax.random.PRNGKey(s * 977 + d), 2)
-    log_a = -jnp.abs(jax.random.normal(ks[0], (1, s, d))) * 0.2
-    b = jax.random.normal(ks[1], (1, s, d))
-    h, _ = lru_chunked(log_a, b, chunk=chunk, bd=128, interpret=True)
-    href, _ = lru_ref(log_a, b)
-    np.testing.assert_allclose(np.asarray(h), np.asarray(href),
                                rtol=2e-4, atol=2e-5)
 
 

@@ -1,7 +1,10 @@
-"""Tests for the Lublin–Feitelson workload generator."""
+"""Tests for the Lublin–Feitelson workload generator.
+
+Property-based tests live in ``test_workload_properties.py`` behind the
+optional ``hypothesis`` dev dependency.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.workload.lublin import (WorkloadParams, generate_workload,
                                    paper_workloads)
@@ -62,14 +65,3 @@ class TestGenerator:
                               for ld in (0.85, 0.90, 0.95)}
         assert flows["hetero0.85"].params.nodes == 500
         assert flows["homog0.90"].params.nodes == 100
-
-    @settings(max_examples=10, deadline=None)
-    @given(st.integers(0, 10_000), st.sampled_from([0.85, 0.9, 0.95]),
-           st.booleans())
-    def test_property_any_seed_valid(self, seed, load, homog):
-        wl = generate_workload(WorkloadParams(
-            n_jobs=200, load=load, homogeneous=homog, seed=seed,
-            nodes=100 if homog else 500))
-        assert np.all(wl.runtime > 0)
-        assert np.all(np.isfinite(wl.work))
-        assert wl.calculated_load() == pytest.approx(load, rel=1e-6)

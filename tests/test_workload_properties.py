@@ -1,0 +1,20 @@
+"""Property-based tests for the workload generator (optional hypothesis)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.workload.lublin import WorkloadParams, generate_workload  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.85, 0.9, 0.95]),
+       st.booleans())
+def test_property_any_seed_valid(seed, load, homog):
+    wl = generate_workload(WorkloadParams(
+        n_jobs=200, load=load, homogeneous=homog, seed=seed,
+        nodes=100 if homog else 500))
+    assert np.all(wl.runtime > 0)
+    assert np.all(np.isfinite(wl.work))
+    assert wl.calculated_load() == pytest.approx(load, rel=1e-6)
