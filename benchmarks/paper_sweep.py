@@ -12,16 +12,23 @@ import time
 
 import numpy as np
 
-from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, run_baselines,
-                        run_packet_grid)
+from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, resolve_mode,
+                        run_baselines, run_packet_grid)
 from repro.workload.lublin import paper_workloads
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 GRID_PATH = os.path.join(RESULTS_DIR, "paper_grid.json")
 
 
-def run_full_grid(n_jobs: int | None = None, seed: int = 0) -> dict:
-    """n_jobs=None -> the paper's 5000; smaller for smoke runs."""
+def run_full_grid(n_jobs: int | None = None, seed: int = 0,
+                  dtype=np.float32, mode: str = "auto") -> dict:
+    """n_jobs=None -> the paper's 5000; smaller for smoke runs.
+
+    `dtype=np.float64` runs the whole study through the scoped precision
+    opt-in (see repro.core.precision); the chosen dtype and the resolved
+    sweep mode are persisted alongside the metrics so downstream figure
+    code and cross-PR comparisons know exactly what produced them.
+    """
     flows = paper_workloads(seed=seed)
     if n_jobs is not None:
         import dataclasses
@@ -29,23 +36,27 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0) -> dict:
         flows = {name: generate_workload(dataclasses.replace(
             wl.params, n_jobs=n_jobs)) for name, wl in flows.items()}
 
+    n_lanes = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
     out = {"scale_ratios": list(PAPER_SCALE_RATIOS),
            "init_props": list(PAPER_INIT_PROPS),
+           "dtype": np.dtype(dtype).name,
+           "sweep_mode": resolve_mode(mode, n_lanes),
+           "workload_digests": {name: wl.golden_digest()
+                                for name, wl in flows.items()},
            "workloads": {}, "baselines": {}, "timing": {}}
     for name, wl in flows.items():
         t0 = time.time()
-        grid = run_packet_grid(wl)
+        grid = run_packet_grid(wl, dtype=dtype, mode=mode)
         dt = time.time() - t0
-        n_exp = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
         out["workloads"][name] = {
             f: np.asarray(getattr(grid, f)).tolist()
             for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
                       "useful_util", "avg_run_wait", "n_groups", "ok")}
-        out["timing"][name] = {"seconds": dt, "experiments": n_exp,
-                               "sec_per_experiment": dt / n_exp}
-        print(f"[paper_sweep] {name}: {n_exp} experiments in {dt:.1f}s "
-              f"({dt / n_exp * 1e3:.1f} ms/experiment)", flush=True)
-        bl = run_baselines(wl)
+        out["timing"][name] = {"seconds": dt, "experiments": n_lanes,
+                               "sec_per_experiment": dt / n_lanes}
+        print(f"[paper_sweep] {name}: {n_lanes} experiments in {dt:.1f}s "
+              f"({dt / n_lanes * 1e3:.1f} ms/experiment)", flush=True)
+        bl = run_baselines(wl, dtype=dtype)
         out["baselines"][name] = {
             alg: {f: np.asarray(getattr(m, f)).tolist()
                   for f in ("avg_wait", "med_wait", "full_util",
@@ -55,9 +66,17 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0) -> dict:
 
 
 def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--float64", action="store_true",
+                    help="run the study in float64 via the precision opt-in")
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "seq", "fused", "vmap_k", "vmap_s"))
+    args = ap.parse_args()
     os.makedirs(RESULTS_DIR, exist_ok=True)
     t0 = time.time()
-    res = run_full_grid()
+    res = run_full_grid(dtype=np.float64 if args.float64 else np.float32,
+                        mode=args.mode)
     res["total_seconds"] = time.time() - t0
     with open(GRID_PATH, "w") as f:
         json.dump(res, f)

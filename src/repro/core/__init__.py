@@ -1,7 +1,7 @@
 """The paper's primary contribution: group-based job scheduling (Packet
 algorithm) with scale-ratio tuning, as a fixed-shape JAX discrete-event
 simulation plus the pure policy functions reused by the ML-cluster layer."""
-from repro.core import packet
+from repro.core import packet, precision
 from repro.core.des import (DesResult, PackedWorkload, pack_workload,
                             resolve_ring, simulate_packet,
                             simulate_packet_host, simulate_packet_reference)
@@ -9,13 +9,13 @@ from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.core.sweep import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
                               lane_sharding, plateau_threshold,
-                              run_baselines, run_packet_grid)
+                              resolve_mode, run_baselines, run_packet_grid)
 
 __all__ = [
-    "packet", "DesResult", "PackedWorkload", "pack_workload",
+    "packet", "precision", "DesResult", "PackedWorkload", "pack_workload",
     "resolve_ring", "simulate_packet", "simulate_packet_host",
     "simulate_packet_reference", "Metrics",
     "efficiency_metrics", "simulate_backfill", "simulate_fcfs",
     "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS", "lane_sharding",
-    "plateau_threshold", "run_baselines", "run_packet_grid",
+    "plateau_threshold", "resolve_mode", "run_baselines", "run_packet_grid",
 ]

@@ -42,6 +42,23 @@ instead of O(N * G). The ring itself is sized `min(M, N)` (every running
 group holds >= 1 node, so at most M run concurrently) rather than a fixed
 512, which cuts the loop-carried state ~5x for the paper's homogeneous
 M = 100 flows; see `resolve_ring`.
+
+Precision
+---------
+The simulation dtype is set at `pack_workload(..., dtype=...)` and carried
+by every time/accumulator array; float64 requires the scoped opt-in in
+`repro.core.precision` (never a global flag flip). Measured against the
+float64 reference over the full 37 x 6 paper grid
+(benchmarks/results/BENCH_dtype.json, 5000-job flows):
+
+  * homogeneous flows and FCFS stay at rounding level in float32 (max
+    same-schedule relative deviation ~7e-3 on waits, ~1e-6 .. 2e-6 on
+    utilizations and FCFS metrics), with <= 3 decision flips per 222 cells;
+  * heterogeneous 5000-job flows are float32-CHAOTIC: 77-83% of grid cells
+    resolve a near-tie in queue weights or event order differently and the
+    schedule diverges wholesale (up to ~650% on per-cell avg_wait; EASY
+    backfill flips too, up to ~25%). Per-cell metric work on long-horizon
+    heterogeneous workloads should use the float64 opt-in.
 """
 from __future__ import annotations
 
@@ -53,7 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import packet
+from repro.core import packet, precision
 from repro.workload.lublin import Workload
 
 INF = jnp.inf
@@ -117,7 +134,13 @@ def pack_workload(wl: Workload, dtype=jnp.float32) -> PackedWorkload:
     A stable sort by type turns each type into one contiguous segment, so
     per-type ranks and prefix work are plain offset arithmetic on one global
     cumsum — no Python loop over jobs.
+
+    `dtype` selects the simulation precision for every float table and, via
+    the packed arrays, every downstream accumulator. float64 requires the
+    explicit x64 opt-in (`repro.core.precision.dtype_scope`); requesting it
+    outside a scope raises instead of silently truncating to float32.
     """
+    dtype = precision.canonical_dtype(dtype)
     H, N = wl.params.n_types, wl.n_jobs
     jt = np.asarray(wl.jtype, np.int64)
     w = np.asarray(wl.work, np.float64)
@@ -233,7 +256,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
     """
     H, N = pw.n_types, pw.n_jobs
     ring = resolve_ring(m_nodes, N, ring)
-    dtype = pw.submit.dtype
+    dtype = precision.canonical_dtype(pw.submit.dtype)
     k = jnp.asarray(k, dtype)
     s_init = jnp.asarray(s_init, dtype)
     m_nodes = jnp.asarray(m_nodes, jnp.int32)
@@ -260,7 +283,9 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
                  pw.tj_prefw[type_ids, st.head])
         oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
         w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j, nonempty)
-        j = jnp.argmax(w)                                     # Step 2
+        # argmax index dtype follows x64 state; pin int32 so the log key
+        # scatter below stays exact under the float64 opt-in.
+        j = jnp.argmax(w).astype(jnp.int32)                   # Step 2
         work = sum_w[j]
         m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)  # Step 4
         dur = packet.group_duration(work, s_j[j], m_grp)
@@ -369,7 +394,7 @@ def simulate_packet_reference(pw: PackedWorkload, k, s_init, m_nodes,
                               max_iters: int | None = None) -> DesResult:
     """Seed-equivalent Packet DES with per-event O(N) metric writes."""
     H, N = pw.n_types, pw.n_jobs
-    dtype = pw.submit.dtype
+    dtype = precision.canonical_dtype(pw.submit.dtype)
     k = jnp.asarray(k, dtype)
     s_init = jnp.asarray(s_init, dtype)
     m_nodes = jnp.asarray(m_nodes, jnp.int32)
@@ -479,8 +504,14 @@ def _simulate_packet_jit(pw, k, s_init, m_nodes, max_iters=None, ring=None):
 
 def simulate_packet_host(wl: Workload, k: float, s_prop: float,
                          dtype=jnp.float32) -> DesResult:
-    """Convenience host entry point: workload + scale ratio + init proportion."""
-    pw = pack_workload(wl, dtype)
-    s = wl.init_time_for_proportion(s_prop)
-    return jax.tree.map(np.asarray, simulate_packet(
-        pw, k, s, wl.params.nodes))
+    """Convenience host entry point: workload + scale ratio + init proportion.
+
+    Passing ``dtype=jnp.float64`` is the float64 opt-in: the whole
+    pack-simulate pipeline runs inside a `precision.dtype_scope`, so the
+    session's global x64 state is untouched.
+    """
+    with precision.dtype_scope(dtype):
+        pw = pack_workload(wl, dtype)
+        s = wl.init_time_for_proportion(s_prop)
+        return jax.tree.map(np.asarray, simulate_packet(
+            pw, k, s, wl.params.nodes))

@@ -8,12 +8,29 @@
 All metrics are measured over the window [0, last submit] (paper: "from the
 experiment start to the last job submit"); the simulation itself runs to
 drain. All computations are jnp so a whole sweep's metrics stay on device.
+
+Every metric inherits the simulation dtype: float32 by default, float64 when
+the workload was packed under the `repro.core.precision` opt-in. The
+measured float32-vs-float64 deviations over the paper grid are recorded in
+``benchmarks/results/BENCH_dtype.json``.
 """
 from __future__ import annotations
 
 from typing import NamedTuple
 
 import jax.numpy as jnp
+
+
+# The scalar per-experiment metric fields (excludes n_groups/ok bookkeeping),
+# and the near-zero floors used whenever a *relative* comparison of metric
+# values is made: |a - b| / max(|b|, floor). Both the dtype tolerance study
+# (benchmarks/bench_dtype.py) and the golden regression suite
+# (tests/test_golden_metrics.py) import these so measured deviations and
+# enforced tolerances always share the same denominator.
+SCALAR_METRIC_FIELDS = ("avg_wait", "med_wait", "avg_qlen", "full_util",
+                        "useful_util", "avg_run_wait")
+METRIC_REL_FLOORS = {"avg_wait": 1e-3, "med_wait": 1e-3, "avg_run_wait": 1e-3,
+                     "avg_qlen": 1e-6, "full_util": 1e-6, "useful_util": 1e-6}
 
 
 class Metrics(NamedTuple):

@@ -22,6 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import precision
 from repro.core.des import (DesResult, PackedWorkload, _window_overlap,
                             INF, resolve_ring)
 
@@ -125,7 +126,7 @@ def simulate_fcfs(pw: PackedWorkload, s_init, m_nodes,
     the queue — the scheduling pass is O(1) per started job.
     """
     N = pw.n_jobs
-    s_init = jnp.asarray(s_init, pw.submit.dtype)
+    s_init = jnp.asarray(s_init, precision.canonical_dtype(pw.submit.dtype))
     ring = resolve_ring(m_nodes, N, ring)
     if max_iters is None:
         max_iters = 4 * N + 64
@@ -160,7 +161,7 @@ def simulate_backfill(pw: PackedWorkload, s_init, m_nodes,
     computed once per pass (conservative, as in production schedulers).
     """
     N = pw.n_jobs
-    dtype = pw.submit.dtype
+    dtype = precision.canonical_dtype(pw.submit.dtype)
     s_init = jnp.asarray(s_init, dtype)
     ring = resolve_ring(m_nodes, N, ring)
     idx = jnp.arange(N)

@@ -23,7 +23,15 @@ selectable explicitly.
 Compiled entry points are module-level and take the PackedWorkload as an
 argument (not a closure), so jit caches are shared across workloads of equal
 shape: sweeping the paper's 6 same-shape workflows compiles once, not six
-times, and repeated `run_packet_grid` calls never retrace.
+times, and repeated `run_packet_grid` calls never retrace. Caches are also
+keyed on dtype (input avals + the x64 trace context), so the float64 opt-in
+(`dtype=jnp.float64`, scoped via `repro.core.precision`) coexists with
+float32 sweeps in one session without cross-talk.
+
+Dtype guidance (study: benchmarks/results/BENCH_dtype.json): float32 grids
+match float64 to ~7e-3 (waits) / ~2e-6 (utilizations) on homogeneous flows,
+but on 5000-job heterogeneous flows 77-83% of cells schedule differently
+(near-tie cascades) — run those in float64 when per-cell values matter.
 """
 from __future__ import annotations
 
@@ -35,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import precision
 from repro.core.des import pack_workload, resolve_ring, simulate_packet
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
@@ -101,6 +110,20 @@ def _baseline_lanes(pw, s_vals, m_nodes, ring):
             "backfill": jax.vmap(bf_one)(s_vals)}
 
 
+def resolve_mode(mode: str, n_lanes: int) -> str:
+    """Resolve mode='auto' to the concrete dispatch layout.
+
+    'fused' only pays when the lane axis actually shards across devices;
+    unsharded lockstep lanes lose ~10x to sequential dispatch (see module
+    docstring), so a single-device backend resolves to 'seq'. Exposed so
+    benchmark provenance (e.g. paper_grid.json) can record the layout that
+    actually ran.
+    """
+    if mode != "auto":
+        return mode
+    return "fused" if lane_sharding(n_lanes) is not None else "seq"
+
+
 def lane_sharding(n_lanes: int):
     """NamedSharding splitting the experiment lane axis across all devices.
 
@@ -145,58 +168,62 @@ def run_packet_grid(wl: Workload,
 
     All paths share module-level compile caches keyed on workload shape, so
     repeated calls (and the paper's 6 same-shape workflows) never retrace.
-    """
-    pw = pack_workload(wl, dtype)
-    m_nodes = int(wl.params.nodes)
-    ring = resolve_ring(m_nodes, pw.n_jobs)
-    s_vals = jnp.asarray([wl.init_time_for_proportion(p) for p in s_props],
-                         dtype)
-    ks_arr = jnp.asarray(ks, dtype)
-    K, S = len(ks), len(s_props)
+    jit caches are additionally keyed on dtype (via input avals and the x64
+    trace context), so float32 and float64 sweeps coexist without retracing
+    each other.
 
+    `dtype=jnp.float64` is the precision opt-in: the whole sweep runs inside
+    `precision.dtype_scope`, leaving the session's global x64 state alone.
+    """
     if mode not in ("auto", "seq", "fused", "vmap_k", "vmap_s"):
         raise ValueError(f"unknown sweep mode {mode!r}")
     if (vmap_k or vmap_s) and mode != "auto":
         raise ValueError("pass either mode= or the legacy vmap_k/vmap_s "
                          "flags, not both")
+    K, S = len(ks), len(s_props)
     if vmap_k:
         mode = "vmap_k"
     elif vmap_s:
         mode = "vmap_s"
-    elif mode == "auto":
-        # fused only pays when the lane axis actually shards across devices;
-        # unsharded lockstep lanes lose ~10x to sequential dispatch (see
-        # module docstring), so fall back to "seq" otherwise.
-        mode = "fused" if lane_sharding(K * S) is not None else "seq"
+    else:
+        mode = resolve_mode(mode, K * S)
 
-    if mode == "vmap_k":
-        cols = [_packet_k_column(pw, ks_arr, s, m_nodes, ring)
-                for s in s_vals]
-        stacked = jax.tree.map(lambda *x: jnp.stack(x, axis=1), *cols)
-        return jax.tree.map(np.asarray, stacked)
-    if mode == "vmap_s":
-        rows = [_packet_s_row(pw, k, s_vals, m_nodes, ring) for k in ks_arr]
-        stacked = jax.tree.map(lambda *x: jnp.stack(x, axis=0), *rows)
-        return jax.tree.map(np.asarray, stacked)
-    if mode == "seq":
-        cells = [[_packet_one(pw, k, s, m_nodes, ring) for s in s_vals]
-                 for k in ks_arr]
-        rows = [jax.tree.map(lambda *x: jnp.stack(x), *row) for row in cells]
-        stacked = jax.tree.map(lambda *x: jnp.stack(x), *rows)
-        return jax.tree.map(np.asarray, stacked)
-    if mode != "fused":
-        raise ValueError(f"unknown sweep mode {mode!r}")
+    with precision.dtype_scope(dtype):
+        pw = pack_workload(wl, dtype)
+        m_nodes = int(wl.params.nodes)
+        ring = resolve_ring(m_nodes, pw.n_jobs)
+        s_vals = jnp.asarray(
+            [wl.init_time_for_proportion(p) for p in s_props], dtype)
+        ks_arr = jnp.asarray(ks, dtype)
 
-    # fused (k x S) lane engine
-    k_lanes = jnp.repeat(ks_arr, S)
-    s_lanes = jnp.tile(s_vals, K)
-    sharding = lane_sharding(K * S)
-    if sharding is not None:
-        k_lanes = jax.device_put(k_lanes, sharding)
-        s_lanes = jax.device_put(s_lanes, sharding)
-    lanes = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring)
-    return jax.tree.map(lambda x: np.asarray(x).reshape((K, S) + x.shape[1:]),
-                        lanes)
+        if mode == "vmap_k":
+            cols = [_packet_k_column(pw, ks_arr, s, m_nodes, ring)
+                    for s in s_vals]
+            stacked = jax.tree.map(lambda *x: jnp.stack(x, axis=1), *cols)
+            return jax.tree.map(np.asarray, stacked)
+        if mode == "vmap_s":
+            rows = [_packet_s_row(pw, k, s_vals, m_nodes, ring)
+                    for k in ks_arr]
+            stacked = jax.tree.map(lambda *x: jnp.stack(x, axis=0), *rows)
+            return jax.tree.map(np.asarray, stacked)
+        if mode == "seq":
+            cells = [[_packet_one(pw, k, s, m_nodes, ring) for s in s_vals]
+                     for k in ks_arr]
+            rows = [jax.tree.map(lambda *x: jnp.stack(x), *row)
+                    for row in cells]
+            stacked = jax.tree.map(lambda *x: jnp.stack(x), *rows)
+            return jax.tree.map(np.asarray, stacked)
+
+        # fused (k x S) lane engine
+        k_lanes = jnp.repeat(ks_arr, S)
+        s_lanes = jnp.tile(s_vals, K)
+        sharding = lane_sharding(K * S)
+        if sharding is not None:
+            k_lanes = jax.device_put(k_lanes, sharding)
+            s_lanes = jax.device_put(s_lanes, sharding)
+        lanes = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring)
+        return jax.tree.map(
+            lambda x: np.asarray(x).reshape((K, S) + x.shape[1:]), lanes)
 
 
 def run_baselines(wl: Workload, s_props: Sequence[float] = PAPER_INIT_PROPS,
@@ -204,14 +231,17 @@ def run_baselines(wl: Workload, s_props: Sequence[float] = PAPER_INIT_PROPS,
     """FCFS and EASY-backfill metrics per init proportion (rigid jobs).
 
     Both baselines and all init proportions run as one batched program.
+    `dtype=jnp.float64` opts into the scoped x64 mode, as in
+    `run_packet_grid`.
     """
-    pw = pack_workload(wl, dtype)
-    m_nodes = int(wl.params.nodes)
-    ring = resolve_ring(m_nodes, pw.n_jobs)
-    s_vals = jnp.asarray([wl.init_time_for_proportion(p) for p in s_props],
-                         dtype)
-    out = _baseline_lanes(pw, s_vals, m_nodes, ring)
-    return {name: jax.tree.map(np.asarray, m) for name, m in out.items()}
+    with precision.dtype_scope(dtype):
+        pw = pack_workload(wl, dtype)
+        m_nodes = int(wl.params.nodes)
+        ring = resolve_ring(m_nodes, pw.n_jobs)
+        s_vals = jnp.asarray(
+            [wl.init_time_for_proportion(p) for p in s_props], dtype)
+        out = _baseline_lanes(pw, s_vals, m_nodes, ring)
+        return {name: jax.tree.map(np.asarray, m) for name, m in out.items()}
 
 
 def plateau_threshold(ks: np.ndarray, avg_wait: np.ndarray,

@@ -20,6 +20,7 @@ M = 500 nodes (heterogeneous flows) or M = 100 (homogeneous flows).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import numpy as np
@@ -79,6 +80,24 @@ class Workload:
         if not (0.0 <= s_prop < 1.0):
             raise ValueError(f"init proportion must be in [0,1), got {s_prop}")
         return float(s_prop / (1.0 - s_prop) * self.runtime.mean())
+
+    def golden_digest(self) -> dict[str, str]:
+        """Stable per-array content digests for regression pinning.
+
+        Returns sha256 hex digests of `submit`/`runtime`/`nodes`/`jtype`,
+        floats rounded to 1e-6 s before hashing so bit-identical generator
+        output is required only up to libm rounding. Workload drift (an
+        accidental generator change) then breaks the determinism suite
+        instead of masquerading as a simulator regression downstream.
+        """
+        def h(a, decimals=None):
+            a = np.ascontiguousarray(
+                np.asarray(a, np.float64).round(decimals) if decimals is not None
+                else np.asarray(a, np.int64))
+            return hashlib.sha256(a.tobytes()).hexdigest()
+
+        return {"submit": h(self.submit, 6), "runtime": h(self.runtime, 6),
+                "nodes": h(self.nodes), "jtype": h(self.jtype)}
 
 
 def _hyper_gamma_ln_runtime(rng: np.random.Generator, log2n: np.ndarray) -> np.ndarray:

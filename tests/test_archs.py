@@ -1,6 +1,10 @@
 """Per-architecture smoke tests: reduced same-family configs, one forward /
 train / decode step on CPU, asserting output shapes + finiteness (no NaNs).
 The FULL configs are exercised only via the dry-run (see launch/dryrun.py).
+
+Whole module is `slow` (minutes of XLA compiles across every architecture):
+deselected from tier-1 by the default ``-m "not slow"`` addopts; run the
+full matrix with ``pytest -m ""``.
 """
 import jax
 import jax.numpy as jnp
@@ -13,6 +17,8 @@ from repro.models.registry import get_family
 from repro.sharding.policy import single_device_policy
 
 KEY = jax.random.PRNGKey(0)
+
+pytestmark = pytest.mark.slow
 
 
 def _inputs(cfg, B, S):

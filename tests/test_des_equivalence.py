@@ -13,8 +13,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import (efficiency_metrics, pack_workload, resolve_ring,
-                        run_packet_grid, simulate_packet,
+from repro.core import (efficiency_metrics, pack_workload, precision,
+                        resolve_ring, run_packet_grid, simulate_packet,
                         simulate_packet_reference)
 from repro.workload.lublin import WorkloadParams, generate_workload
 
@@ -85,6 +85,18 @@ class TestGroupLogEquivalence:
         assert resolve_ring(m, pw.n_jobs) == min(m, pw.n_jobs)
         assert_des_equal(small, big)
 
+    def test_float64_equivalence(self, small_workload):
+        """The group-log rewrite is dtype-agnostic: under the float64
+        opt-in it must still match the reference implementation, and to a
+        much tighter tolerance than float32 allows."""
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(0.3)
+        with precision.dtype_scope(np.float64):
+            pw = pack_workload(small_workload, np.float64)
+            assert_des_equal(simulate_packet(pw, 2.0, s, m),
+                             simulate_packet_reference(pw, 2.0, s, m),
+                             rtol=1e-12, atol=1e-9)
+
     def test_priorities_preserved(self, small_workload):
         """The group-log path must honour priority/t_max like the seed."""
         pw = pack_workload(small_workload)
@@ -136,6 +148,19 @@ class TestFusedSweepEquivalence:
                 np.testing.assert_allclose(
                     getattr(base, f), getattr(g, f), rtol=1e-5,
                     err_msg=f"{name}:{f}")
+
+    def test_float64_modes_agree_tightly(self, small_workload):
+        """Under the float64 opt-in, seq and fused are the same arithmetic
+        per lane — they must agree far below float32 resolution."""
+        kw = dict(ks=[0.5, 8.0, 100.0], s_props=[0.05, 0.5],
+                  dtype=np.float64)
+        a = run_packet_grid(small_workload, mode="seq", **kw)
+        b = run_packet_grid(small_workload, mode="fused", **kw)
+        for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
+                  "useful_util", "avg_run_wait"):
+            np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                       rtol=1e-12, err_msg=f)
+        assert a.avg_wait.dtype == np.float64
 
     @pytest.mark.slow
     def test_fused_grid_full_s_axis(self, small_workload):

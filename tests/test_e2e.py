@@ -1,6 +1,11 @@
 """End-to-end integration: training driver (with checkpoint resume),
 serving driver, simulation CLI, and a real dry-run subprocess (512
-placeholder devices, production mesh) for one cell."""
+placeholder devices, production mesh) for one cell.
+
+Whole module is `slow` (multi-minute drivers + subprocess dry-run):
+deselected from tier-1 by the default ``-m "not slow"`` addopts; run with
+``pytest -m ""`` for the full matrix.
+"""
 import json
 import os
 import subprocess
@@ -10,6 +15,8 @@ import numpy as np
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+pytestmark = pytest.mark.slow
 
 
 def test_train_driver_runs_and_learns(tmp_path):

@@ -1,0 +1,208 @@
+"""Golden-metrics regression suite, run under BOTH simulation dtypes.
+
+A small paper-shaped grid (two Lublin workflows x 4 scale ratios x 3 init
+proportions, Packet + both rigid baselines) is pinned against a checked-in
+float64 reference (``tests/golden/golden_metrics.json``):
+
+  * the float64 run (through the scoped `repro.core.precision` opt-in) must
+    reproduce the golden values to ~ulp (rtol 1e-9) — any drift is a
+    simulator change, not rounding;
+  * the float32 run must stay within per-metric tolerances derived from the
+    float32-vs-float64 tolerance study over the full paper grid
+    (``benchmarks/results/BENCH_dtype.json``, `suggested_float32_rtol` =
+    10x the worst rounding-only deviation), and must form *exactly* the
+    same group counts — the golden grid is verified decision-flip-free at
+    regeneration time, so a flipped near-tie shows up as a hard failure
+    here rather than hiding inside a loose tolerance.
+
+The suite also asserts the opt-in never leaks: after a float64 run the
+global ``jax_enable_x64`` flag is untouched and float32 is still the
+session default.
+
+Regenerate after an *intentional* simulator/generator change with:
+
+    PYTHONPATH=src python tests/test_golden_metrics.py
+
+(and re-run ``python -m benchmarks.bench_dtype`` so the tolerances and the
+docstring deviation figures stay in sync; `test_workload_golden.py` pins
+the generator inputs themselves).
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import precision, run_baselines, run_packet_grid
+from repro.workload.lublin import WorkloadParams, generate_workload
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "golden_metrics.json")
+BENCH_DTYPE_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks", "results", "BENCH_dtype.json")
+
+# Paper-shaped but small: one heterogeneous flow (larger cluster, wide
+# jobs) and one "modified generator" homogeneous flow, ks spanning the
+# sweep's decades, init proportions spanning the paper's range.
+GOLDEN_WORKLOADS = {
+    "hetero": WorkloadParams(n_jobs=200, nodes=96, load=0.9,
+                             homogeneous=False, seed=17),
+    "homog": WorkloadParams(n_jobs=200, nodes=48, load=0.9,
+                            homogeneous=True, seed=18,
+                            daily_amplitude=0.3),
+}
+GOLDEN_KS = (0.5, 2.0, 20.0, 200.0)
+GOLDEN_S_PROPS = (0.05, 0.3, 0.5)
+
+# Shared with benchmarks/bench_dtype.py via repro.core.metrics: relative
+# tolerance is applied against max(|golden|, floor), with the same floors
+# the study measured deviations against.
+from repro.core.metrics import (METRIC_REL_FLOORS as ABS_FLOORS,
+                                SCALAR_METRIC_FIELDS as METRIC_FIELDS)
+# Fallback float32 tolerances if BENCH_dtype.json is absent: the
+# `suggested_float32_rtol` block the 2026-08 study measured (10x the worst
+# same-schedule deviation of the golden-scale workloads over the full
+# 37 x 6 grid).
+FALLBACK_FLOAT32_RTOL = {
+    "avg_wait": 3.1e-2, "med_wait": 1.4e-2, "avg_qlen": 3.1e-2,
+    "full_util": 1.4e-5, "useful_util": 1.1e-5, "avg_run_wait": 3.4e-5,
+}
+
+
+def float32_rtol() -> dict:
+    if os.path.exists(BENCH_DTYPE_PATH):
+        with open(BENCH_DTYPE_PATH) as f:
+            study = json.load(f)
+        sug = study.get("suggested_float32_rtol", {})
+        if set(METRIC_FIELDS) <= set(sug):
+            return {f: float(sug[f]) for f in METRIC_FIELDS}
+    return dict(FALLBACK_FLOAT32_RTOL)
+
+
+def compute_grids(dtype) -> dict:
+    """The golden grid under one dtype; mode='seq' pins the dispatch layout
+    (engine-layout equivalence is covered by test_des_equivalence)."""
+    out = {}
+    for name, params in GOLDEN_WORKLOADS.items():
+        wl = generate_workload(params)
+        grid = run_packet_grid(wl, ks=GOLDEN_KS, s_props=GOLDEN_S_PROPS,
+                               dtype=dtype, mode="seq")
+        bl = run_baselines(wl, s_props=GOLDEN_S_PROPS, dtype=dtype)
+        entry = {"packet": {f: np.asarray(getattr(grid, f)).tolist()
+                            for f in METRIC_FIELDS}}
+        entry["packet"]["n_groups"] = \
+            np.asarray(grid.n_groups).astype(int).tolist()
+        entry["packet"]["ok"] = bool(np.asarray(grid.ok).all())
+        for alg, m in bl.items():
+            entry[alg] = {f: np.asarray(getattr(m, f)).tolist()
+                          for f in METRIC_FIELDS}
+            entry[alg]["ok"] = bool(np.asarray(m.ok).all())
+        out[name] = entry
+    return out
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden metrics file missing: {GOLDEN_PATH} "
+                    "(regenerate: PYTHONPATH=src python "
+                    "tests/test_golden_metrics.py)")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def _assert_close(got, want, field, rtol, label):
+    got = np.asarray(got, np.float64)
+    want = np.asarray(want, np.float64)
+    denom = np.maximum(np.abs(want), ABS_FLOORS[field])
+    rel = np.abs(got - want) / denom
+    worst = float(rel.max()) if rel.size else 0.0
+    assert worst <= rtol, (
+        f"{label}/{field}: max rel deviation {worst:.3e} > allowed "
+        f"{rtol:.3e} (worst cell {np.unravel_index(int(np.argmax(rel)), rel.shape)})")
+
+
+class TestGoldenFloat64:
+    """float64 == the golden reference to ~ulp (identical op order)."""
+
+    def test_matches_golden(self, golden):
+        got = compute_grids(np.float64)
+        for name, entry in golden["grids"].items():
+            for alg in ("packet", "fcfs", "backfill"):
+                for f in METRIC_FIELDS:
+                    _assert_close(got[name][alg][f], entry[alg][f], f,
+                                  1e-9, f"f64/{name}/{alg}")
+            assert got[name]["packet"]["n_groups"] == \
+                entry["packet"]["n_groups"]
+            assert got[name]["packet"]["ok"]
+
+    def test_no_global_x64_leakage(self, golden):
+        """The float64 run above must not have flipped the session config."""
+        import jax.numpy as jnp
+        assert not jax.config.jax_enable_x64
+        assert jnp.asarray(1.0).dtype == jnp.float32
+
+
+class TestGoldenFloat32:
+    """float32 within study-derived tolerances AND schedule-identical."""
+
+    def test_within_derived_tolerances(self, golden):
+        rtols = float32_rtol()
+        got = compute_grids(np.float32)
+        for name, entry in golden["grids"].items():
+            for alg in ("packet", "fcfs", "backfill"):
+                for f in METRIC_FIELDS:
+                    _assert_close(got[name][alg][f], entry[alg][f], f,
+                                  rtols[f], f"f32/{name}/{alg}")
+            # decision-flip-free grid: group counts must match exactly
+            assert got[name]["packet"]["n_groups"] == \
+                entry["packet"]["n_groups"], (
+                    f"{name}: float32 formed different groups than the "
+                    "float64 golden reference — a near-tie flipped; pick a "
+                    "different golden seed or investigate the scheduler")
+            assert got[name]["packet"]["ok"]
+
+    def test_tolerances_are_meaningful(self):
+        """Derived tolerances must stay regression-sensitive: well below
+        the O(1) cell deviations that paper-scale decision flips produce
+        (BENCH_dtype.json measures up to ~650% there), so a real scheduler
+        regression cannot hide inside the float32 allowance."""
+        for f, v in float32_rtol().items():
+            assert 1e-7 <= v < 5e-2, (f, v)
+
+
+def regenerate():
+    with precision.dtype_scope(np.float64):
+        pass  # touch the scope early so misconfiguration fails fast
+    grids64 = compute_grids(np.float64)
+    grids32 = compute_grids(np.float32)
+    for name in grids64:
+        assert grids64[name]["packet"]["n_groups"] == \
+            grids32[name]["packet"]["n_groups"], (
+                f"{name}: golden grid sits on a float32 decision boundary; "
+                "choose different seeds/ks")
+        assert grids64[name]["packet"]["ok"]
+    payload = {
+        "comment": "float64 reference metrics for the golden grid; "
+                   "regenerate with PYTHONPATH=src python "
+                   "tests/test_golden_metrics.py",
+        "spec": {
+            "workloads": {n: {k: getattr(p, k) for k in
+                              ("n_jobs", "nodes", "load", "homogeneous",
+                               "seed", "daily_amplitude")}
+                          for n, p in GOLDEN_WORKLOADS.items()},
+            "ks": list(GOLDEN_KS), "s_props": list(GOLDEN_S_PROPS),
+            "mode": "seq", "reference_dtype": "float64",
+        },
+        "grids": grids64,
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {GOLDEN_PATH} (verified decision-flip-free vs float32)")
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    regenerate()

@@ -1,0 +1,118 @@
+"""Unit tests for the scoped float64 opt-in (`repro.core.precision`).
+
+The contract under test: float64 is available exactly inside
+`dtype_scope(float64)`, misuse fails loudly instead of silently truncating,
+and no scope — however nested or exited — flips the session's global x64
+state (float32 sessions never change behaviour because a float64 study ran
+earlier in the process).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack_workload, precision, simulate_packet
+
+from conftest import make_workload
+
+
+def _tiny_workload():
+    return make_workload([0.0, 1.0], [10.0, 20.0], [1, 1], [0, 0], 2, 4)
+
+
+class TestCanonicalDtype:
+    def test_float32_always_valid(self):
+        assert precision.canonical_dtype(jnp.float32) == np.dtype(np.float32)
+        assert precision.canonical_dtype("float32") == np.dtype(np.float32)
+
+    def test_float64_outside_scope_raises(self):
+        assert not precision.x64_enabled()
+        with pytest.raises(ValueError, match="jax_enable_x64"):
+            precision.canonical_dtype(np.float64)
+
+    def test_float64_inside_scope_valid(self):
+        with precision.dtype_scope(np.float64):
+            assert precision.x64_enabled()
+            assert precision.canonical_dtype(np.float64) == \
+                np.dtype(np.float64)
+        assert not precision.x64_enabled()
+
+    @pytest.mark.parametrize("bad", [np.int32, np.float16, bool])
+    def test_non_simulation_dtypes_rejected(self, bad):
+        with pytest.raises(ValueError, match="float32 or float64"):
+            precision.canonical_dtype(bad)
+        with pytest.raises(ValueError, match="float32 or float64"):
+            with precision.dtype_scope(bad):
+                pass
+
+
+class TestDtypeScope:
+    def test_float32_scope_is_noop(self):
+        before = jax.config.jax_enable_x64
+        with precision.dtype_scope(np.float32) as d:
+            assert d == np.dtype(np.float32)
+            assert jax.config.jax_enable_x64 == before
+
+    def test_nested_scopes_restore(self):
+        with precision.dtype_scope(np.float64):
+            with precision.dtype_scope(np.float32):
+                # inner float32 scope must not tear down the outer opt-in
+                assert precision.x64_enabled()
+            with precision.dtype_scope(np.float64):
+                assert precision.x64_enabled()
+            assert precision.x64_enabled()
+        assert not precision.x64_enabled()
+
+    def test_exception_restores(self):
+        with pytest.raises(RuntimeError):
+            with precision.dtype_scope(np.float64):
+                raise RuntimeError("boom")
+        assert not precision.x64_enabled()
+
+    def test_session_default_untouched_after_float64_work(self):
+        with precision.dtype_scope(np.float64):
+            x = jnp.asarray(1.5, jnp.float64)
+            assert x.dtype == jnp.float64
+        assert jnp.asarray(1.5).dtype == jnp.float32
+
+
+class TestPackedDtypes:
+    def test_pack_respects_dtype(self):
+        wl = _tiny_workload()
+        pw32 = pack_workload(wl)
+        assert pw32.submit.dtype == jnp.float32
+        assert pw32.tj_prefw.dtype == jnp.float32
+        with precision.dtype_scope(np.float64):
+            pw64 = pack_workload(wl, np.float64)
+            for field in ("submit", "work", "cumw", "runtime", "tj_submit",
+                          "tj_prefw", "t_last_submit"):
+                assert getattr(pw64, field).dtype == jnp.float64, field
+            # integer tables stay int32 regardless of precision mode
+            assert pw64.jtype.dtype == jnp.int32
+            assert pw64.nodes.dtype == jnp.int32
+
+    def test_pack_float64_outside_scope_raises(self):
+        with pytest.raises(ValueError, match="jax_enable_x64"):
+            pack_workload(_tiny_workload(), np.float64)
+
+    def test_simulate_float64_pw_outside_scope_raises(self):
+        wl = _tiny_workload()
+        with precision.dtype_scope(np.float64):
+            pw64 = pack_workload(wl, np.float64)
+        # the packed arrays survive the scope, but simulating them outside
+        # it would silently mix precisions — must refuse instead
+        with pytest.raises(ValueError, match="jax_enable_x64"):
+            simulate_packet(pw64, 1.0, 5.0, 4)
+
+    def test_result_dtype_follows_workload(self):
+        wl = _tiny_workload()
+        res32 = simulate_packet(pack_workload(wl), 1.0, 5.0, 4)
+        assert res32.start_t.dtype == jnp.float32
+        assert res32.busy_ns.dtype == jnp.float32
+        with precision.dtype_scope(np.float64):
+            res64 = simulate_packet(pack_workload(wl, np.float64),
+                                    1.0, 5.0, 4)
+            assert res64.start_t.dtype == jnp.float64
+            assert res64.qlen_int.dtype == jnp.float64
+        np.testing.assert_allclose(np.asarray(res32.start_t),
+                                   np.asarray(res64.start_t), rtol=1e-6)

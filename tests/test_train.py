@@ -1,4 +1,9 @@
-"""Training-substrate tests: loss/optimizer/microbatching/data pipeline."""
+"""Training-substrate tests: loss/optimizer/microbatching/data pipeline.
+
+Whole module is `slow` (model-layer compiles, not simulation core):
+deselected from tier-1 by the default ``-m "not slow"`` addopts; run with
+``pytest -m ""`` for the full matrix.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +20,8 @@ from repro.train.step import init_state, make_train_step
 
 KEY = jax.random.PRNGKey(0)
 OCFG = optim_lib.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+
+pytestmark = pytest.mark.slow
 
 
 def test_chunked_ce_matches_dense():
