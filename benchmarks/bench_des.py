@@ -1,22 +1,31 @@
-"""DES microbenchmark: group-log event loop vs the seed O(N)-writes path.
+"""DES microbenchmark: event loops AND sweep dispatch layouts, tracked per PR.
 
-Measures ms/experiment for
+Two sections, both recorded to ``benchmarks/results/BENCH_des.json`` (or
+``--out PATH``):
 
-  * ``reference`` — the seed implementation (`simulate_packet_reference`:
-    per-event O(N) masked metric writes, fixed 512-slot ring),
-  * ``group_log`` — the production path (`simulate_packet`: O(1) log
-    appends + vectorized post-pass, ring = min(M, N)),
-  * ``fused``     — the group-log path amortized through the fused (k x S)
-    lane engine of `repro.core.sweep`,
+  * ``headline`` / ``scaling_with_n`` — ms/experiment for the simulator
+    cores dispatched sequentially:
 
-on a paper-scale 5000-job homogeneous workload grid, plus a
-scaling-with-N series, and records everything to
-``benchmarks/results/BENCH_des.json`` so the perf trajectory is tracked
-across PRs.
+      - ``reference`` — the seed implementation
+        (`simulate_packet_reference`: per-event O(N) masked metric writes,
+        fixed 512-slot ring),
+      - ``group_log`` — the production while-loop path (`simulate_packet`:
+        O(1) log appends + vectorized post-pass, ring = min(M, N)).
+
+  * ``engine_ab`` — the sweep-layout A/B on the same grid through
+    `repro.core.sweep`: ``seq`` (cached per-experiment dispatch) vs
+    ``chunked`` (sorted fixed-width lanes through the event-budget scan
+    engine) vs ``fused`` (all lanes, one program, padded + sharded on
+    multi-device backends). ``batched_vs_seq_ratio`` is the headline
+    regression number: PR 1's vmapped-while fused engine sat at ~16x on a
+    single CPU device; the scan engine must stay under
+    ``REGRESSION_BAR`` (2.0), which `--smoke` (the CI gate) enforces via
+    the exit code.
 
 Usage:
     python -m benchmarks.bench_des            # full (5000-job headline)
-    python -m benchmarks.bench_des --smoke    # <= 30 s CI-budget variant
+    python -m benchmarks.bench_des --smoke    # <= ~60 s CI-budget variant
+    python -m benchmarks.bench_des --smoke --out smoke.json
 """
 from __future__ import annotations
 
@@ -37,7 +46,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 BENCH_PATH = os.path.join(RESULTS_DIR, "BENCH_des.json")
 
 
-REPEATS = 5     # best-of-R to shed scheduler/allocator noise
+REPEATS = 5         # best-of-R to shed scheduler/allocator noise
+REGRESSION_BAR = 2.0  # best batched layout must stay within 2x of seq
 
 
 def _bench_sequential(sim_fn, pw, ks, s, m_nodes, **kw):
@@ -53,14 +63,17 @@ def _bench_sequential(sim_fn, pw, ks, s, m_nodes, **kw):
     return best / len(ks) * 1e3
 
 
-def _bench_grid(wl, ks, s_props, mode):
-    """Best-of ms/experiment through the sweep engines in the given mode.
+def _bench_mode(wl, ks, s_props, mode):
+    """Best-of ms/experiment through the sweep layouts in the given mode.
 
     Inputs are packed once outside the timer (like _bench_sequential), so
     the recorded number is the engine itself, not per-call host repacking.
+    Chunked includes its host-side sort/unsort — that is part of the
+    layout's real cost.
     """
     import jax.numpy as jnp
-    from repro.core.sweep import _packet_lanes, _packet_one, lane_sharding
+    from repro.core.sweep import (CHUNK_LANES, _packet_one, _run_lane_chunks,
+                                  _run_lanes_fused)
 
     pw = pack_workload(wl)
     m = int(wl.params.nodes)
@@ -68,30 +81,52 @@ def _bench_grid(wl, ks, s_props, mode):
     s_vals = jnp.asarray([wl.init_time_for_proportion(p) for p in s_props],
                          jnp.float32)
     ks_arr = jnp.asarray(ks, jnp.float32)
-    if mode == "auto":
-        mode = ("fused" if lane_sharding(len(ks) * len(s_props)) is not None
-                else "seq")
+    k_lanes = jnp.repeat(ks_arr, len(s_props))
+    s_lanes = jnp.tile(s_vals, len(ks))
 
     if mode == "fused":
-        k_lanes = jnp.repeat(ks_arr, len(s_props))
-        s_lanes = jnp.tile(s_vals, len(ks))
-        run = lambda: jax.block_until_ready(
-            _packet_lanes(pw, k_lanes, s_lanes, m, ring))
+        run = lambda: _run_lanes_fused(pw, k_lanes, s_lanes, m, ring)
+    elif mode == "chunked":
+        run = lambda: _run_lane_chunks(pw, k_lanes, s_lanes, m, ring,
+                                       CHUNK_LANES)
     else:
         def run():
             for k in ks_arr:
                 for s in s_vals:
                     jax.block_until_ready(_packet_one(pw, k, s, m, ring))
+            return None
 
     out = run()                                           # compile
-    if mode == "fused":
-        assert np.asarray(out.ok).all()
+    if out is not None:
+        assert np.asarray(out.ok).all(), mode
     best = np.inf
     for _ in range(REPEATS):
         t0 = time.perf_counter()
         run()
         best = min(best, time.perf_counter() - t0)
     return best / (len(ks) * len(s_props)) * 1e3
+
+
+def bench_engine_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
+    """The sweep-layout A/B: seq vs chunked vs fused on one grid."""
+    wl = generate_workload(WorkloadParams(
+        n_jobs=n_jobs, nodes=nodes, load=0.9, homogeneous=True, seed=1))
+    seq_ms = _bench_mode(wl, ks, s_props, "seq")
+    chunked_ms = _bench_mode(wl, ks, s_props, "chunked")
+    fused_ms = _bench_mode(wl, ks, s_props, "fused")
+    best_batched = min(chunked_ms, fused_ms)
+    return {
+        "n_jobs": n_jobs, "nodes": nodes, "n_k": len(ks),
+        "n_s": len(s_props), "n_lanes": len(ks) * len(s_props),
+        "n_devices": jax.device_count(),
+        "seq_ms_per_experiment": seq_ms,
+        "chunked_ms_per_experiment": chunked_ms,
+        "fused_ms_per_experiment": fused_ms,
+        "best_batched_mode": ("chunked" if chunked_ms <= fused_ms
+                              else "fused"),
+        "batched_vs_seq_ratio": best_batched / seq_ms,
+        "regression_bar": REGRESSION_BAR,
+    }
 
 
 def bench_grid(n_jobs: int, ks, s_props, nodes=100) -> dict:
@@ -103,26 +138,23 @@ def bench_grid(n_jobs: int, ks, s_props, nodes=100) -> dict:
 
     ref_ms = _bench_sequential(simulate_packet_reference, pw, ks, s, m)
     glog_ms = _bench_sequential(simulate_packet, pw, ks, s, m)
-    grid_ms = _bench_grid(wl, ks, s_props, "auto")
-    fused_ms = _bench_grid(wl, ks, s_props, "fused")
     return {
         "n_jobs": n_jobs, "nodes": nodes, "n_k": len(ks),
         "n_s": len(s_props), "ring": resolve_ring(m, n_jobs),
         "n_devices": jax.device_count(),
         "reference_ms_per_experiment": ref_ms,
         "group_log_ms_per_experiment": glog_ms,
-        "grid_auto_ms_per_experiment": grid_ms,
-        "fused_ms_per_experiment": fused_ms,
         "speedup_group_log_vs_reference": ref_ms / glog_ms,
-        "speedup_grid_auto_vs_reference": ref_ms / grid_ms,
-        "speedup_fused_vs_reference": ref_ms / fused_ms,
     }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced sizes, finishes in <= 30 s")
+                    help="reduced sizes, finishes in ~a minute (the CI "
+                         "regression gate)")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="output JSON path (default: results/BENCH_des.json)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -141,11 +173,17 @@ def main(argv=None) -> int:
     print(f"[bench_des]   reference  {headline['reference_ms_per_experiment']:8.1f} ms/exp")
     print(f"[bench_des]   group_log  {headline['group_log_ms_per_experiment']:8.1f} ms/exp "
           f"({headline['speedup_group_log_vs_reference']:.2f}x)")
-    print(f"[bench_des]   grid(auto) {headline['grid_auto_ms_per_experiment']:8.1f} ms/exp "
-          f"({headline['speedup_grid_auto_vs_reference']:.2f}x)")
-    print(f"[bench_des]   fused      {headline['fused_ms_per_experiment']:8.1f} ms/exp "
-          f"({headline['speedup_fused_vs_reference']:.2f}x, "
-          f"{headline['n_devices']} device(s))")
+
+    print(f"[bench_des] engine A/B: seq vs chunked vs fused "
+          f"({len(ks) * len(s_props)} lanes, "
+          f"{jax.device_count()} device(s))")
+    engine_ab = bench_engine_ab(headline_n, ks, s_props)
+    for mode in ("seq", "chunked", "fused"):
+        print(f"[bench_des]   {mode:8s} "
+              f"{engine_ab[f'{mode}_ms_per_experiment']:8.1f} ms/exp")
+    print(f"[bench_des]   best batched ({engine_ab['best_batched_mode']}) = "
+          f"{engine_ab['batched_vs_seq_ratio']:.2f}x seq "
+          f"(bar: {REGRESSION_BAR}x)")
 
     scaling = []
     for n in scaling_ns:
@@ -165,21 +203,20 @@ def main(argv=None) -> int:
         "unix_time": time.time(),
         "total_seconds": None,          # filled below
         "headline": headline,
+        "engine_ab": engine_ab,
         "scaling_with_n": scaling,
     }
     out["total_seconds"] = time.perf_counter() - t_start
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(BENCH_PATH, "w") as f:
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"[bench_des] wrote {BENCH_PATH} "
+    print(f"[bench_des] wrote {args.out} "
           f"({out['total_seconds']:.1f}s total)")
 
-    target = 2.0
-    ok = headline["speedup_group_log_vs_reference"] >= target or \
-        headline["speedup_grid_auto_vs_reference"] >= target or \
-        headline["speedup_fused_vs_reference"] >= target
-    print(f"[bench_des] {'PASS' if ok else 'FAIL'}: >= {target}x lower "
-          f"ms/experiment than the seed path")
+    ok = (headline["speedup_group_log_vs_reference"] >= 2.0 and
+          engine_ab["batched_vs_seq_ratio"] <= REGRESSION_BAR)
+    print(f"[bench_des] {'PASS' if ok else 'FAIL'}: group_log >= 2x "
+          f"reference AND best batched layout <= {REGRESSION_BAR}x seq")
     return 0 if ok else 1
 
 

@@ -3,6 +3,16 @@
 6 workflows x 37 scale ratios x 6 init proportions, exactly the study of
 paper §6-7.  Results land in benchmarks/results/paper_grid.json and are read
 by the per-figure benchmark functions in benchmarks/run.py.
+
+Precision policy: the PR-2 tolerance study
+(benchmarks/results/BENCH_dtype.json) found 77-83% of paper-grid cells on
+5000-job HETEROGENEOUS flows schedule differently in float32 vs float64
+(near-tie cascades), while homogeneous flows stay at rounding level. Each
+workload therefore defaults to the cheapest dtype that is decision-stable:
+float64 for heterogeneous flows, float32 for homogeneous ones. ``--float64``
+forces everything up, ``--float32`` is the escape hatch that forces
+everything down (accepting the documented schedule flips); the per-workload
+decision and its reason are persisted in the grid provenance either way.
 """
 from __future__ import annotations
 
@@ -12,22 +22,37 @@ import time
 
 import numpy as np
 
-from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, resolve_mode,
-                        run_baselines, run_packet_grid)
+from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, run_baselines,
+                        run_packet_grid, sweep_plan)
 from repro.workload.lublin import paper_workloads
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 GRID_PATH = os.path.join(RESULTS_DIR, "paper_grid.json")
 
 
+def workload_dtype(wl, force_dtype=None) -> tuple[np.dtype, str]:
+    """The per-workload precision decision and why it was made."""
+    if force_dtype is not None:
+        return np.dtype(force_dtype), "forced by flag"
+    if wl.params.homogeneous:
+        return np.dtype(np.float32), (
+            "homogeneous flow: float32 matches float64 to rounding level "
+            "(BENCH_dtype.json)")
+    return np.dtype(np.float64), (
+        "heterogeneous flow: 77-83% of float32 cells flip schedules "
+        "(BENCH_dtype.json near-tie cascades)")
+
+
 def run_full_grid(n_jobs: int | None = None, seed: int = 0,
-                  dtype=np.float32, mode: str = "auto") -> dict:
+                  dtype=None, mode: str = "auto") -> dict:
     """n_jobs=None -> the paper's 5000; smaller for smoke runs.
 
-    `dtype=np.float64` runs the whole study through the scoped precision
-    opt-in (see repro.core.precision); the chosen dtype and the resolved
-    sweep mode are persisted alongside the metrics so downstream figure
-    code and cross-PR comparisons know exactly what produced them.
+    ``dtype=None`` (default) applies the per-workload policy of
+    `workload_dtype`: float64 for heterogeneous flows, float32 for
+    homogeneous ones. Passing a concrete dtype forces it for every
+    workload. The chosen dtype (with its reason) and the resolved sweep
+    plan are persisted alongside the metrics so downstream figure code and
+    cross-PR comparisons know exactly what produced them.
     """
     flows = paper_workloads(seed=seed)
     if n_jobs is not None:
@@ -37,16 +62,19 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
             wl.params, n_jobs=n_jobs)) for name, wl in flows.items()}
 
     n_lanes = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
+    decisions = {name: workload_dtype(wl, dtype) for name, wl in flows.items()}
     out = {"scale_ratios": list(PAPER_SCALE_RATIOS),
            "init_props": list(PAPER_INIT_PROPS),
-           "dtype": np.dtype(dtype).name,
-           "sweep_mode": resolve_mode(mode, n_lanes),
+           "dtype": {name: d.name for name, (d, _) in decisions.items()},
+           "dtype_reason": {name: why for name, (_, why) in decisions.items()},
+           "sweep_plan": sweep_plan(mode, n_lanes),
            "workload_digests": {name: wl.golden_digest()
                                 for name, wl in flows.items()},
            "workloads": {}, "baselines": {}, "timing": {}}
     for name, wl in flows.items():
+        wl_dtype, _ = decisions[name]
         t0 = time.time()
-        grid = run_packet_grid(wl, dtype=dtype, mode=mode)
+        grid = run_packet_grid(wl, dtype=wl_dtype, mode=mode)
         dt = time.time() - t0
         out["workloads"][name] = {
             f: np.asarray(getattr(grid, f)).tolist()
@@ -55,8 +83,9 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
         out["timing"][name] = {"seconds": dt, "experiments": n_lanes,
                                "sec_per_experiment": dt / n_lanes}
         print(f"[paper_sweep] {name}: {n_lanes} experiments in {dt:.1f}s "
-              f"({dt / n_lanes * 1e3:.1f} ms/experiment)", flush=True)
-        bl = run_baselines(wl, dtype=dtype)
+              f"({dt / n_lanes * 1e3:.1f} ms/experiment, "
+              f"{wl_dtype.name})", flush=True)
+        bl = run_baselines(wl, dtype=wl_dtype)
         out["baselines"][name] = {
             alg: {f: np.asarray(getattr(m, f)).tolist()
                   for f in ("avg_wait", "med_wait", "full_util",
@@ -68,15 +97,23 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--float64", action="store_true",
-                    help="run the study in float64 via the precision opt-in")
+    prec = ap.add_mutually_exclusive_group()
+    prec.add_argument("--float64", action="store_true",
+                      help="force float64 for ALL workloads (default: only "
+                           "heterogeneous flows run float64)")
+    prec.add_argument("--float32", action="store_true",
+                      help="escape hatch: force float32 for ALL workloads, "
+                           "accepting the documented hetero-flow schedule "
+                           "flips (BENCH_dtype.json)")
     ap.add_argument("--mode", default="auto",
-                    choices=("auto", "seq", "fused", "vmap_k", "vmap_s"))
+                    choices=("auto", "seq", "chunked", "fused", "vmap_k",
+                             "vmap_s"))
     args = ap.parse_args()
+    dtype = (np.float64 if args.float64
+             else np.float32 if args.float32 else None)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     t0 = time.time()
-    res = run_full_grid(dtype=np.float64 if args.float64 else np.float32,
-                        mode=args.mode)
+    res = run_full_grid(dtype=dtype, mode=args.mode)
     res["total_seconds"] = time.time() - t0
     with open(GRID_PATH, "w") as f:
         json.dump(res, f)

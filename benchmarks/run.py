@@ -92,7 +92,8 @@ def fig5_queue_time_workload085_5pct(data):
     # ~20 for the paper's): the claim is that it EXISTS inside the grid
     check("fig5: avg wait reaches a plateau (position = work/s; "
           "paper's workloads: ~20)",
-          plateau <= 700, f"plateau at k={plateau}")
+          plateau.threshold <= 700,
+          f"plateau at k={plateau.threshold} (level {plateau.plateau:.0f}s)")
     decay = mw[KS >= 20].mean() / max(mw[KS <= 0.5].mean(), 1e-9)
     check("fig5: median collapses at moderate k (paper: ->0 by k=8)",
           decay < 0.25, f"median(k>=20)/median(k<=0.5)={decay:.3f}")
@@ -171,9 +172,10 @@ def fig10_intensity(data):
           at_plateau[0.90] <= at_plateau[0.95] * 1.5,
           " ".join(f"{ld}:{v:.0f}s" for ld, v in at_plateau.items()))
     for ld, v in m.items():
+        res = plateau_threshold(KS, v, rel_tol=0.10)
         check(f"fig10: load {ld} also plateaus",
-              plateau_threshold(KS, v, rel_tol=0.10) <= 700,
-              f"k={plateau_threshold(KS, v, rel_tol=0.10)}")
+              res.threshold <= 700,
+              f"k={res.threshold} (level {res.plateau:.0f}s)")
     return {str(ld): v.tolist() for ld, v in m.items()}
 
 

@@ -29,7 +29,8 @@ for i, k in enumerate(ks):
           f"{grid.useful_util[i, 0]:7.3f} | {grid.avg_wait[i, 1]:14.1f}")
 
 thr = plateau_threshold(np.asarray(ks), grid.avg_wait[:, 0])
-print(f"\nadministrator recommendation: scale ratio k >= {thr} reaches the "
+print(f"\nadministrator recommendation: scale ratio k >= {thr.threshold} "
+      f"(plateau {thr.plateau:.1f}s) reaches the "
       f"queue-time plateau;\nraising k further buys nothing (paper §8); "
       f"lowering k raises full utilization\nbut inflates queue time "
       f"(the paper's central trade-off).")

@@ -43,6 +43,19 @@ group holds >= 1 node, so at most M run concurrently) rather than a fixed
 512, which cuts the loop-carried state ~5x for the paper's homogeneous
 M = 100 flows; see `resolve_ring`.
 
+Two equivalent engines expose that loop:
+
+  * `simulate_packet` — `lax.while_loop` with a nested scheduling loop and
+    the group log carried as [N] state. Fastest for ONE experiment (exact
+    early exit per event); this is the sweep's mode="seq" path.
+  * `simulate_packet_scan` — a branchless single-step-kind `lax.scan` over
+    a precomputed event budget (~3N, segmented early exit) that EMITS log
+    records as scan outputs instead of scattering into [N] carry. This is
+    the vmap-friendly form: batched lanes cost about the same per
+    experiment as sequential dispatch (the vmapped while engine lost ~16x
+    on CPU dragging [lanes, N] log state through lockstep iterations); the
+    sweep's chunked/fused modes build on it. See repro.core.sweep.
+
 Precision
 ---------
 The simulation dtype is set at `pack_workload(..., dtype=...)` and carried
@@ -212,29 +225,34 @@ def _window_overlap(a, b, t_end):
     return jnp.maximum(jnp.minimum(b, t_end) - jnp.minimum(a, t_end), 0.0)
 
 
-def _reconstruct_job_times(pw: PackedWorkload, st: DesState, s_j):
+def _reconstruct_job_times(pw: PackedWorkload, log_key, log_t, log_m,
+                           log_headw, s_j):
     """Vectorized post-pass: job -> its group via per-type searchsorted.
 
     Within a type, group tails strictly increase and partition that type's
     ranks, so job (j, r) belongs to the type-j group with the smallest
     tail > r. Encoding groups as `j * (N+1) + tail` and jobs as
     `j * (N+1) + rank` makes that one global sorted lookup: tails are in
-    1..N so type blocks never interleave. Jobs never grouped (only possible
-    when the iteration cap was hit) keep start = +inf, which also keeps the
-    `ok` flag's all-finite check faithful.
+    1..N so type blocks never interleave. The log may have any capacity
+    L >= 1 (the while engine uses L = N, the scan engine L = its step
+    budget); unused slots carry the int32-max pad key and sort last. Jobs
+    never grouped (only possible when the iteration/budget cap was hit)
+    keep start = +inf, which also keeps the `ok` flag's all-finite check
+    faithful.
     """
     N = pw.n_jobs
+    L = log_key.shape[0]
     dtype = pw.submit.dtype
-    order = jnp.argsort(st.log_key)
-    skey = st.log_key[order]
+    order = jnp.argsort(log_key)
+    skey = log_key[order]
     q = pw.jtype * (N + 1) + pw.rank
     ppos = jnp.searchsorted(skey, q, side="right")
-    g = order[jnp.minimum(ppos, N - 1)]
-    covered = (ppos < N) & (st.log_key[g] // (N + 1) == pw.jtype)
-    t0 = st.log_t[g]
-    m_g = jnp.maximum(st.log_m[g], 1).astype(dtype)
+    g = order[jnp.minimum(ppos, L - 1)]
+    covered = (ppos < L) & (log_key[g] // (N + 1) == pw.jtype)
+    t0 = log_t[g]
+    m_g = jnp.maximum(log_m[g], 1).astype(dtype)
     start_t = jnp.where(covered, t0, INF)
-    run_start = t0 + s_j[pw.jtype] + (pw.cumw - st.log_headw[g]) / m_g
+    run_start = t0 + s_j[pw.jtype] + (pw.cumw - log_headw[g]) / m_g
     run_start_t = jnp.where(covered, run_start, INF)
     return start_t, run_start_t
 
@@ -357,7 +375,206 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         iters=jnp.zeros((), jnp.int32))
 
     st = jax.lax.while_loop(cond, body, st0)
-    start_t, run_start_t = _reconstruct_job_times(pw, st, s_j)
+    start_t, run_start_t = _reconstruct_job_times(
+        pw, st.log_key, st.log_t, st.log_m, st.log_headw, s_j)
+    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
+        jnp.all(st.head == st.tail) & jnp.all(jnp.isfinite(start_t))
+    return DesResult(start_t=start_t, run_start_t=run_start_t,
+                     qlen_int=st.qlen_int, busy_ns=st.busy_ns,
+                     useful_ns=st.useful_ns, n_groups=st.n_groups,
+                     makespan=st.t, ok=ok)
+
+
+# --------------------------------------------------------------------------
+# Event-budget scan engine: the batched-lane form of the group-log DES.
+# --------------------------------------------------------------------------
+
+EVENT_BUDGET_SLACK = 64   # headroom over the 3N analytic step bound
+SCAN_SEG = 256            # default segment length (early-exit granularity)
+
+
+def event_budget(n_jobs: int) -> int:
+    """Safe per-grid step budget for `simulate_packet_scan`.
+
+    Each scan step either consumes one event (a submission or a group
+    completion: at most N + G of those) or forms one group (G of those),
+    and every group drains >= 1 job so G <= N. 3N + slack steps therefore
+    always drain a lane, whatever its (k, s).
+    """
+    return 3 * max(1, int(n_jobs)) + EVENT_BUDGET_SLACK
+
+
+class _ScanState(NamedTuple):
+    t: jnp.ndarray            # current time
+    next_sub: jnp.ndarray     # index of next submission (global order)
+    head: jnp.ndarray         # [H] per-type queue window start (rank)
+    tail: jnp.ndarray         # [H] per-type queue window end (rank)
+    m_free: jnp.ndarray       # free nodes
+    grp_end: jnp.ndarray      # [ring] completion time of running groups
+    grp_m: jnp.ndarray        # [ring] nodes held
+    qlen_int: jnp.ndarray
+    busy_ns: jnp.ndarray
+    useful_ns: jnp.ndarray
+    n_groups: jnp.ndarray
+
+
+def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
+                         priority=None, t_max=None, ring: int | None = None,
+                         budget: int | None = None,
+                         seg: int | None = None) -> DesResult:
+    """Packet DES as a fixed-budget `lax.scan` — the batched-lane engine.
+
+    Same policy and same per-step arithmetic as `simulate_packet`, but
+    restructured for vmapping over many (k, s) lanes at once:
+
+      * ONE flat step kind instead of an outer event loop with a nested
+        scheduling `while_loop`: each step either forms one group (when the
+        greedy pass is unblocked) or consumes one event, chosen branchlessly
+        with masks, so vmapped lanes never pay a both-branches `lax.cond`
+        or a lockstep inner loop.
+      * the group log is EMITTED as scan outputs (`ys`) instead of carried
+        as [N] state and scattered per step — under vmap the while engine
+        drags [lanes, N] log arrays through every iteration, which is the
+        dominant cost of the old fused mode on CPU.
+      * a drained lane carries `active = False` and its step is a no-op
+        (masked updates, pad log key), so lanes of different event counts
+        can share one program.
+      * the scan runs in `seg`-length segments under a `while_loop` that
+        stops as soon as every lane in the dispatch has drained ("event
+        budget with early exit"): the budget is the analytic worst case
+        (`event_budget(N)` ~ 3N), but a dispatch of short lanes pays only
+        its own steps, rounded up to a segment.
+
+    Results are equivalent to `simulate_packet` lane-for-lane (the
+    equivalence suite pins every DesResult field); `ok` is False only if
+    the budget was insufficient, which the 3N bound rules out for the
+    default.
+    """
+    H, N = pw.n_types, pw.n_jobs
+    ring = resolve_ring(m_nodes, N, ring)
+    budget = event_budget(N) if budget is None else max(1, int(budget))
+    seg = SCAN_SEG if seg is None else max(1, int(seg))
+    n_segs = -(-budget // seg)
+    budget = n_segs * seg               # segments tile the log exactly
+    dtype = precision.canonical_dtype(pw.submit.dtype)
+    k = jnp.asarray(k, dtype)
+    s_init = jnp.asarray(s_init, dtype)
+    m_nodes = jnp.asarray(m_nodes, jnp.int32)
+    s_j = jnp.full((H,), s_init, dtype)
+    p_j = jnp.ones((H,), dtype) if priority is None else jnp.asarray(priority, dtype)
+    tmax_j = (jnp.full((H,), 3600.0, dtype) if t_max is None
+              else jnp.asarray(t_max, dtype))
+
+    t_end_metric = pw.t_last_submit
+    type_ids = jnp.arange(H)
+    key_pad = jnp.iinfo(jnp.int32).max
+    zero_f = jnp.zeros((), dtype)
+    zero_i = jnp.zeros((), jnp.int32)
+    one_i = jnp.ones((), jnp.int32)
+
+    def lane_active(st: _ScanState):
+        return ((st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end)) |
+                jnp.any(st.tail > st.head))
+
+    def step(st: _ScanState, _):
+        nonempty = st.tail > st.head
+        free_mask = jnp.isinf(st.grp_end)
+        queued = jnp.any(nonempty)
+        active = lane_active(st)
+        can_sched = (st.m_free > 0) & queued & jnp.any(free_mask)
+        do_sched = active & can_sched
+        do_event = active & ~can_sched
+
+        # greedy scheduling pass (paper Steps 1-5), masked unless do_sched
+        sum_w = (pw.tj_prefw[type_ids, st.tail] -
+                 pw.tj_prefw[type_ids, st.head])
+        oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
+        w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j,
+                                 nonempty)
+        j = jnp.argmax(w).astype(jnp.int32)
+        work = sum_w[j]
+        m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)
+        dur = packet.group_duration(work, s_j[j], m_grp)
+        sslot = jnp.argmax(free_mask)
+        t_gfin = st.t + dur
+        head_w = pw.tj_prefw[j, st.head[j]]
+        busy_inc = m_grp.astype(dtype) * _window_overlap(
+            st.t, t_gfin, t_end_metric)
+        useful_inc = m_grp.astype(dtype) * _window_overlap(
+            st.t + s_j[j], t_gfin, t_end_metric)
+
+        # event step (submission or completion), masked unless do_event
+        t_sub = jnp.where(st.next_sub < N,
+                          pw.submit[jnp.minimum(st.next_sub, N - 1)], INF)
+        eslot = jnp.argmin(st.grp_end)
+        t_efin = st.grp_end[eslot]
+        take_sub = t_sub <= t_efin
+        t_new = jnp.where(take_sub, t_sub, t_efin)
+        qlen = jnp.sum(st.tail - st.head).astype(dtype)
+        q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
+        sub_j = pw.jtype[jnp.minimum(st.next_sub, N - 1)]
+
+        do_submit = do_event & take_sub
+        do_finish = do_event & ~take_sub
+
+        head = st.head.at[j].set(jnp.where(do_sched, st.tail[j], st.head[j]))
+        tail = st.tail.at[sub_j].add(jnp.where(do_submit, one_i, zero_i))
+        m_free = (st.m_free - jnp.where(do_sched, m_grp, zero_i)
+                  + jnp.where(do_finish, st.grp_m[eslot], zero_i))
+        grp_end = st.grp_end.at[sslot].set(
+            jnp.where(do_sched, t_gfin, st.grp_end[sslot]))
+        grp_end = grp_end.at[eslot].set(
+            jnp.where(do_finish, INF, grp_end[eslot]))
+        grp_m = st.grp_m.at[sslot].set(
+            jnp.where(do_sched, m_grp, st.grp_m[sslot]))
+        grp_m = grp_m.at[eslot].set(
+            jnp.where(do_finish, zero_i, grp_m[eslot]))
+
+        y = (jnp.where(do_sched, j * (N + 1) + st.tail[j], key_pad),
+             jnp.where(do_sched, st.t, zero_f),
+             jnp.where(do_sched, m_grp, zero_i),
+             jnp.where(do_sched, head_w, zero_f))
+
+        st = _ScanState(
+            t=jnp.where(do_event, t_new, st.t),
+            next_sub=st.next_sub + jnp.where(do_submit, one_i, zero_i),
+            head=head, tail=tail, m_free=m_free,
+            grp_end=grp_end, grp_m=grp_m,
+            qlen_int=st.qlen_int + jnp.where(do_event, q_inc, zero_f),
+            busy_ns=st.busy_ns + jnp.where(do_sched, busy_inc, zero_f),
+            useful_ns=st.useful_ns + jnp.where(do_sched, useful_inc, zero_f),
+            n_groups=st.n_groups + jnp.where(do_sched, one_i, zero_i))
+        return st, y
+
+    def seg_cond(carry):
+        st, _, s_idx = carry
+        return lane_active(st) & (s_idx < n_segs)
+
+    def seg_body(carry):
+        st, logs, s_idx = carry
+        st, ys = jax.lax.scan(step, st, None, length=seg)
+        off = s_idx * seg
+        logs = tuple(jax.lax.dynamic_update_slice(buf, y, (off,))
+                     for buf, y in zip(logs, ys))
+        return st, logs, s_idx + 1
+
+    st0 = _ScanState(
+        t=jnp.zeros((), dtype), next_sub=jnp.zeros((), jnp.int32),
+        head=jnp.zeros((H,), jnp.int32), tail=jnp.zeros((H,), jnp.int32),
+        m_free=m_nodes, grp_end=jnp.full((ring,), INF, dtype),
+        grp_m=jnp.zeros((ring,), jnp.int32),
+        qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
+        useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32))
+    logs0 = (jnp.full((budget,), key_pad, jnp.int32),
+             jnp.zeros((budget,), dtype),
+             jnp.zeros((budget,), jnp.int32),
+             jnp.zeros((budget,), dtype))
+
+    st, logs, _ = jax.lax.while_loop(
+        seg_cond, seg_body, (st0, logs0, jnp.zeros((), jnp.int32)))
+    log_key, log_t, log_m, log_headw = logs
+    start_t, run_start_t = _reconstruct_job_times(
+        pw, log_key, log_t, log_m, log_headw, s_j)
     ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
         jnp.all(st.head == st.tail) & jnp.all(jnp.isfinite(start_t))
     return DesResult(start_t=start_t, run_start_t=run_start_t,

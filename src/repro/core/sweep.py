@@ -1,50 +1,67 @@
-"""Sweep driver: the paper's experiment grid as fused, shardable XLA programs.
+"""Sweep driver: the paper's experiment grid as batched, shardable XLA programs.
 
 The paper ran 1332 experiments (6 workflows x 37 scale ratios x 6 init
 proportions), each "dozens of minutes" in Alea. Here one workload's whole
-(k x S) grid can run as a SINGLE jitted program: the grid is flattened into
-a lane axis of len(ks) * len(s_props) experiments (222 per workload for the
-paper's grid) and `vmap`ped over both the scale ratio and the init time at
-once, so the full study is 6 XLA dispatches total. Because experiments are
-a pure data axis, the lane inputs are placed with a `NamedSharding` over all
-available devices whenever the lane count divides evenly — the same program
-runs one lane per device slice on a pod with no code change (see ROADMAP
-"Open items" for the multi-host extension).
+(k x S) grid is flattened into a lane axis of len(ks) * len(s_props)
+experiments (222 per workload for the paper's grid) and driven through one
+of three dispatch layouts over the event-budget scan engine
+(`repro.core.des.simulate_packet_scan`):
 
-Lane batching is a throughput trade, not a free win: a vmapped while_loop
-steps every lane until the slowest drains and turns per-lane scalar updates
-into lane-axis gathers/scatters. With the O(1)-per-event group-log DES the
-per-lane body is tiny, so on a single CPU device sequential dispatch of the
-cached per-experiment program is ~10x faster per experiment than lockstep
-lanes, while on multi-device backends the fused program wins by sharding.
-`run_packet_grid(mode="auto")` picks accordingly; every mode is also
-selectable explicitly.
+  * ``"seq"``     — one cached-jit dispatch per experiment (the while-loop
+    engine `simulate_packet`). Zero batching overhead; the baseline every
+    other mode is measured against.
+  * ``"chunked"`` — lanes sorted by *predicted event count* (monotone
+    decreasing in k * s: large scale ratios starve groups of nodes, so the
+    queue drains in few big groups) and processed as a few fixed-size
+    vmapped dispatches. Lanes of similar event count retire together, so
+    the scan's segmented early exit stops each chunk near its own step
+    count instead of the grid-wide worst case. This is the fastest layout
+    on a single CPU device for paper-sized grids (see
+    benchmarks/results/BENCH_des.json).
+  * ``"fused"``   — ONE program over all lanes. The scalable layout: the
+    lane axis is padded up to the next device-count multiple with sentinel
+    lanes (copies of the last real lane, sliced off after the gather) and
+    placed with a `NamedSharding` over all local devices, so the 222-lane
+    paper grid shards on 2/4/8-device backends even though 222 is not a
+    power-of-two multiple.
 
-Compiled entry points are module-level and take the PackedWorkload as an
-argument (not a closure), so jit caches are shared across workloads of equal
-shape: sweeping the paper's 6 same-shape workflows compiles once, not six
-times, and repeated `run_packet_grid` calls never retrace. Caches are also
-keyed on dtype (input avals + the x64 trace context), so the float64 opt-in
-(`dtype=jnp.float64`, scoped via `repro.core.precision`) coexists with
-float32 sweeps in one session without cross-talk.
+Why the scan engine: a vmapped `while_loop` (the PR-1 fused engine) carries
+the [lanes, N] group log through every lockstep iteration and scatters into
+it per event, which lost ~16x to sequential dispatch on one CPU device.
+`simulate_packet_scan` instead emits log records as scan outputs, carries
+only O(H + ring) state, and runs a branchless masked step over a precomputed
+event budget (~3N, with segmented early exit) — batched lanes now cost about
+the same per experiment as sequential dispatch, and chunking makes them
+cheaper (BENCH_des.json "engine_ab" section tracks the ratio across PRs).
+
+`run_packet_grid(mode="auto")` resolves the layout from lane count and
+device count (`resolve_mode`); `sweep_plan` returns the same decision plus
+its inputs as a dict so benchmark provenance (e.g. paper_grid.json) records
+what actually ran. Compiled entry points are module-level and take the
+PackedWorkload as an argument (not a closure), so jit caches are shared
+across workloads of equal shape and keyed on dtype (input avals + the x64
+trace context): the float64 opt-in (`dtype=jnp.float64`, scoped via
+`repro.core.precision`) coexists with float32 sweeps in one session.
 
 Dtype guidance (study: benchmarks/results/BENCH_dtype.json): float32 grids
 match float64 to ~7e-3 (waits) / ~2e-6 (utilizations) on homogeneous flows,
 but on 5000-job heterogeneous flows 77-83% of cells schedule differently
-(near-tie cascades) — run those in float64 when per-cell values matter.
+(near-tie cascades) — `benchmarks/paper_sweep.py` therefore defaults
+heterogeneous flows to float64 and records the per-workload decision.
 """
 from __future__ import annotations
 
 import itertools
 from functools import partial
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision
-from repro.core.des import pack_workload, resolve_ring, simulate_packet
+from repro.core.des import (event_budget, pack_workload, resolve_ring,
+                            simulate_packet, simulate_packet_scan)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.workload.lublin import Workload
@@ -62,9 +79,24 @@ PAPER_INIT_PROPS: tuple[float, ...] = (0.05, 0.10, 0.20, 0.30, 0.40, 0.50)
 
 assert len(PAPER_SCALE_RATIOS) == 37
 
+SWEEP_MODES = ("auto", "seq", "chunked", "fused", "vmap_k", "vmap_s")
+CHUNK_LANES = 64          # chunked-mode dispatch width (measured sweet spot)
+CHUNKED_MIN_LANES = 32    # below this, per-dispatch batching can't amortize
+# Measured same-schedule float32 deviation ceiling for avg_wait over the
+# full paper grid (benchmarks/results/BENCH_dtype.json
+# `suggested_float32_rtol`, 10x the worst rounding-only deviation). Used as
+# the default absolute-slack scale in `plateau_threshold`, so the plateau
+# call is exactly as tolerant as float32 arithmetic is imprecise.
+FLOAT32_AVG_WAIT_RTOL = 0.031
+
 
 def _one_experiment(pw, k, s, m_nodes, ring):
     res = simulate_packet(pw, k, s, m_nodes, ring=ring)
+    return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
+
+
+def _one_experiment_scan(pw, k, s, m_nodes, ring):
+    res = simulate_packet_scan(pw, k, s, m_nodes, ring=ring)
     return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
 
 
@@ -76,22 +108,22 @@ def _packet_one(pw, k, s, m_nodes, ring):
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
 def _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring):
-    """Fused engine: one vmap over the flattened (k x S) lane axis."""
-    return jax.vmap(_one_experiment, in_axes=(None, 0, 0, None, None))(
+    """Batched lanes through the event-budget scan engine (chunked/fused)."""
+    return jax.vmap(_one_experiment_scan, in_axes=(None, 0, 0, None, None))(
         pw, k_lanes, s_lanes, m_nodes, ring)
 
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
 def _packet_k_column(pw, ks_arr, s, m_nodes, ring):
     """One init-proportion column batched over the scale-ratio axis."""
-    return jax.vmap(_one_experiment, in_axes=(None, 0, None, None, None))(
+    return jax.vmap(_one_experiment_scan, in_axes=(None, 0, None, None, None))(
         pw, ks_arr, s, m_nodes, ring)
 
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
 def _packet_s_row(pw, k, s_vals, m_nodes, ring):
     """One scale-ratio row batched over the init-proportion axis."""
-    return jax.vmap(_one_experiment, in_axes=(None, None, 0, None, None))(
+    return jax.vmap(_one_experiment_scan, in_axes=(None, None, 0, None, None))(
         pw, k, s_vals, m_nodes, ring)
 
 
@@ -110,32 +142,143 @@ def _baseline_lanes(pw, s_vals, m_nodes, ring):
             "backfill": jax.vmap(bf_one)(s_vals)}
 
 
-def resolve_mode(mode: str, n_lanes: int) -> str:
-    """Resolve mode='auto' to the concrete dispatch layout.
+def predicted_lane_events(k_lanes, s_lanes) -> np.ndarray:
+    """Relative event-count predictor used to sort lanes into chunks.
 
-    'fused' only pays when the lane axis actually shards across devices;
-    unsharded lockstep lanes lose ~10x to sequential dispatch (see module
-    docstring), so a single-device backend resolves to 'seq'. Exposed so
-    benchmark provenance (e.g. paper_grid.json) can record the layout that
-    actually ran.
+    The scan engine's step count is N + 2G where G is the number of groups
+    formed. G is monotone *decreasing* in both the scale ratio k and the
+    init time s: large k means few nodes per group (m = ceil(W / (k s))),
+    long group durations and a queue that drains in few big groups, while
+    small k * s forms a near-singleton group per job (G -> N). The product
+    k * s is therefore a monotone proxy; lanes are sorted by it so chunk
+    neighbours retire at similar step counts. Only the ORDER matters —
+    budgets stay at the safe `event_budget` bound and early exit does the
+    rest — so the proxy needs no calibration.
     """
-    if mode != "auto":
-        return mode
-    return "fused" if lane_sharding(n_lanes) is not None else "seq"
+    score = np.asarray(k_lanes, np.float64) * np.asarray(s_lanes, np.float64)
+    return -score        # descending events == ascending k * s
 
 
-def lane_sharding(n_lanes: int):
+def lane_order(k_lanes, s_lanes) -> np.ndarray:
+    """Stable lane permutation: predicted-longest lanes first."""
+    return np.argsort(-predicted_lane_events(k_lanes, s_lanes), kind="stable")
+
+
+def lane_padding(n_lanes: int, n_devices: int | None = None) -> int:
+    """Sentinel lanes needed to round n_lanes up to a device multiple."""
+    if n_devices is None:
+        n_devices = jax.device_count()
+    return (-n_lanes) % max(1, n_devices)
+
+
+def lane_sharding(n_lanes: int, pad: bool = False):
     """NamedSharding splitting the experiment lane axis across all devices.
 
-    Returns None on a single device or when the lane count does not divide
-    the device count (XLA would need padding; callers then use the default
-    replicated placement).
+    Returns None on a single device or (by default) when the lane count
+    does not divide the device count — callers following the historical
+    ``if sharding is not None: device_put(...)`` pattern keep the
+    replicated fallback. ``pad=True`` declares the caller pads the lane
+    axis with `lane_padding` sentinel lanes before placement (as
+    `run_packet_grid(mode="fused")` does), so any lane count shards — the
+    paper's 222-lane grid included — on 2/4/8-device backends.
     """
     devices = jax.devices()
-    if len(devices) <= 1 or n_lanes % len(devices) != 0:
+    if len(devices) <= 1:
+        return None
+    if not pad and n_lanes % len(devices) != 0:
         return None
     mesh = jax.sharding.Mesh(np.asarray(devices), ("lane",))
     return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("lane"))
+
+
+def resolve_mode(mode: str, n_lanes: int) -> str:
+    """Resolve mode='auto' to the concrete dispatch layout; validate others.
+
+    Measured heuristics (benchmarks/results/BENCH_des.json, single CPU
+    device vs sharded backends):
+
+      * more than one device -> "fused": the padded lane axis shards, and
+        per-device lane counts shrink with the device count.
+      * one device, >= CHUNKED_MIN_LANES lanes -> "chunked": sorted chunks
+        through the scan engine beat sequential dispatch on paper-sized
+        grids and stay within ~1.2x on small ones.
+      * one device, small grid -> "seq": nothing to amortize.
+
+    Any explicit mode must be one of SWEEP_MODES; unknown strings raise
+    instead of silently falling through to a default layout.
+    """
+    if mode not in SWEEP_MODES:
+        raise ValueError(
+            f"unknown sweep mode {mode!r}; available: {SWEEP_MODES}")
+    if mode != "auto":
+        return mode
+    if jax.device_count() > 1 and n_lanes >= jax.device_count():
+        return "fused"
+    return "chunked" if n_lanes >= CHUNKED_MIN_LANES else "seq"
+
+
+def sweep_plan(mode: str, n_lanes: int) -> dict:
+    """The resolve_mode decision plus its inputs, for benchmark provenance.
+
+    `benchmarks/paper_sweep.py` persists this next to the metrics so a
+    paper_grid.json records not just WHAT ran but WHY that layout was
+    picked (lane count, device count, padding, chunk width).
+    """
+    resolved = resolve_mode(mode, n_lanes)
+    return {
+        "requested_mode": mode,
+        "mode": resolved,
+        "n_lanes": int(n_lanes),
+        "n_devices": int(jax.device_count()),
+        "lane_pad": int(lane_padding(n_lanes)) if resolved == "fused" else 0,
+        "chunk_lanes": CHUNK_LANES if resolved == "chunked" else None,
+        "chunked_min_lanes": CHUNKED_MIN_LANES,
+    }
+
+
+def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int):
+    """Sorted equal-width chunks through the scan engine, then unsort.
+
+    The requested `chunk` width only sets the number of dispatches
+    (ceil(L / chunk)); the actual width is balanced to ceil(L / n_chunks)
+    so a grid slightly over a chunk boundary doesn't pay a nearly-empty
+    padded dispatch (222 lanes at width 64 -> 4 dispatches of 56, not
+    3 x 64 + 30). Every chunk is padded to exactly that width (repeating
+    its last lane) so all dispatches share one compiled program; the
+    inverse permutation restores grid order before reshaping.
+    """
+    L = int(k_lanes.shape[0])
+    n_chunks = max(1, -(-L // max(1, chunk)))
+    width = -(-L // n_chunks)
+    order = lane_order(np.asarray(k_lanes), np.asarray(s_lanes))
+    chunks = []
+    for c in range(0, L, width):
+        idx = order[c:c + width]
+        pad = width - len(idx)
+        if pad:
+            idx = np.concatenate([idx, np.repeat(idx[-1:], pad)])
+        out = _packet_lanes(pw, k_lanes[idx], s_lanes[idx], m_nodes, ring)
+        chunks.append(jax.tree.map(lambda x: np.asarray(x)[:width - pad]
+                                   if pad else np.asarray(x), out))
+    gathered = jax.tree.map(lambda *x: np.concatenate(x, axis=0), *chunks)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(L)
+    return jax.tree.map(lambda x: x[inv], gathered)
+
+
+def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring):
+    """All lanes in one dispatch, lane axis padded + sharded when possible."""
+    L = int(k_lanes.shape[0])
+    pad = lane_padding(L)
+    if pad:
+        k_lanes = jnp.concatenate([k_lanes, jnp.repeat(k_lanes[-1:], pad)])
+        s_lanes = jnp.concatenate([s_lanes, jnp.repeat(s_lanes[-1:], pad)])
+    sharding = lane_sharding(L + pad, pad=True)
+    if sharding is not None:
+        k_lanes = jax.device_put(k_lanes, sharding)
+        s_lanes = jax.device_put(s_lanes, sharding)
+    out = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring)
+    return jax.tree.map(lambda x: np.asarray(x)[:L], out)
 
 
 def run_packet_grid(wl: Workload,
@@ -144,27 +287,17 @@ def run_packet_grid(wl: Workload,
                     dtype=jnp.float32,
                     vmap_s: bool = False,
                     vmap_k: bool = False,
-                    mode: str = "auto") -> Metrics:
+                    mode: str = "auto",
+                    chunk_lanes: int | None = None) -> Metrics:
     """Metrics over the (scale ratio x init proportion) grid of one workload.
 
     Returns a Metrics pytree whose leaves have shape [len(ks), len(s_props)].
 
-    Modes:
-      * ``"fused"`` — ONE XLA program over all len(ks) * len(s_props)
-        experiment lanes, lane axis device-sharded when possible. The
-        scalable layout: on an n-device backend each device runs lanes/n
-        experiments of the same program.
-      * ``"seq"`` — one cached-jit dispatch per experiment. On a single
-        CPU device this wins: the group-log event body is so cheap that a
-        batched while_loop's lockstep iteration (all lanes step until the
-        slowest drains, with gather/scatter over the lane axis) costs ~10x
-        the per-lane work, while 222 sequential dispatches of a ~ms program
-        are pure compute.
-      * ``"auto"`` (default) — "fused" when `lane_sharding` can actually
-        split the lane axis across devices (the sharding pays for the
-        lockstep overhead), else "seq".
-      * ``vmap_k=True`` / ``vmap_s=True`` — the narrower column/row
-        batchings, kept for A/B comparison.
+    Modes (see the module docstring for the layouts): ``"seq"``,
+    ``"chunked"``, ``"fused"``, ``"auto"`` (device/lane-count heuristic via
+    `resolve_mode`), plus the legacy ``vmap_k=True`` / ``vmap_s=True``
+    column/row batchings kept for A/B comparison (passing both is an
+    error — previously vmap_k silently won).
 
     All paths share module-level compile caches keyed on workload shape, so
     repeated calls (and the paper's 6 same-shape workflows) never retrace.
@@ -174,9 +307,13 @@ def run_packet_grid(wl: Workload,
 
     `dtype=jnp.float64` is the precision opt-in: the whole sweep runs inside
     `precision.dtype_scope`, leaving the session's global x64 state alone.
+    `chunk_lanes` overrides the chunked-mode dispatch width (default
+    CHUNK_LANES).
     """
-    if mode not in ("auto", "seq", "fused", "vmap_k", "vmap_s"):
-        raise ValueError(f"unknown sweep mode {mode!r}")
+    if vmap_k and vmap_s:
+        raise ValueError("vmap_k=True and vmap_s=True are mutually "
+                         "exclusive batching layouts; pass at most one "
+                         "(or use mode='fused' for the full lane axis)")
     if (vmap_k or vmap_s) and mode != "auto":
         raise ValueError("pass either mode= or the legacy vmap_k/vmap_s "
                          "flags, not both")
@@ -214,14 +351,14 @@ def run_packet_grid(wl: Workload,
             stacked = jax.tree.map(lambda *x: jnp.stack(x), *rows)
             return jax.tree.map(np.asarray, stacked)
 
-        # fused (k x S) lane engine
+        # batched lane layouts over the scan engine
         k_lanes = jnp.repeat(ks_arr, S)
         s_lanes = jnp.tile(s_vals, K)
-        sharding = lane_sharding(K * S)
-        if sharding is not None:
-            k_lanes = jax.device_put(k_lanes, sharding)
-            s_lanes = jax.device_put(s_lanes, sharding)
-        lanes = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring)
+        if mode == "chunked":
+            lanes = _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring,
+                                     max(1, int(chunk_lanes or CHUNK_LANES)))
+        else:                       # fused
+            lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring)
         return jax.tree.map(
             lambda x: np.asarray(x).reshape((K, S) + x.shape[1:]), lanes)
 
@@ -244,17 +381,46 @@ def run_baselines(wl: Workload, s_props: Sequence[float] = PAPER_INIT_PROPS,
         return {name: jax.tree.map(np.asarray, m) for name, m in out.items()}
 
 
-def plateau_threshold(ks: np.ndarray, avg_wait: np.ndarray,
-                      rel_tol: float = 0.05) -> float:
+class PlateauResult(NamedTuple):
+    """`plateau_threshold` output: the tuned scale ratio AND the plateau
+    level it converged to, so callers can sanity-check flip-prone cells
+    (a float32 near-tie cascade moves `plateau`, not just `threshold`)."""
+    threshold: float    # smallest k after which avg_wait stays near plateau
+    plateau: float      # the large-k plateau value (median of the tail)
+
+
+def plateau_threshold(ks, avg_wait, rel_tol: float = 0.05,
+                      abs_tol: float | None = None,
+                      plateau_tail: int = 5) -> PlateauResult:
     """The paper's actionable output: the smallest scale ratio after which
-    the average queue time stays within rel_tol of its large-k plateau."""
-    ks = np.asarray(ks, np.float64)
-    w = np.asarray(avg_wait, np.float64)
-    plateau = np.median(w[-5:])
+    the average queue time stays within tolerance of its large-k plateau.
+
+    `ks` need not arrive sorted — both arrays are sorted together by k
+    (the plateau is a large-k property, so order matters); mismatched or
+    empty inputs raise. The tolerance band is
+    ``rel_tol * max(plateau, 1) + abs_tol`` where `abs_tol` defaults to
+    ``FLOAT32_AVG_WAIT_RTOL * max(plateau, 1)`` — the measured float32
+    rounding envelope from the BENCH_dtype study — instead of the previous
+    hard-coded 1.0 s, so the slack scales with the metric rather than
+    assuming second-scale waits.
+    """
+    ks = np.atleast_1d(np.asarray(ks, np.float64))
+    w = np.atleast_1d(np.asarray(avg_wait, np.float64))
+    if ks.ndim != 1 or ks.shape != w.shape:
+        raise ValueError(f"ks and avg_wait must be equal-length 1-D arrays, "
+                         f"got shapes {ks.shape} and {w.shape}")
+    if ks.size == 0:
+        raise ValueError("plateau_threshold needs at least one scale ratio")
+    order = np.argsort(ks, kind="stable")
+    ks, w = ks[order], w[order]
+    tail = max(1, min(int(plateau_tail), len(w)))
+    plateau = float(np.median(w[-tail:]))
     ref = max(plateau, 1e-9)
-    good = np.abs(w - plateau) <= rel_tol * max(ref, 1.0) + 1.0
+    if abs_tol is None:
+        abs_tol = FLOAT32_AVG_WAIT_RTOL * max(ref, 1.0)
+    good = np.abs(w - plateau) <= rel_tol * max(ref, 1.0) + abs_tol
     # find first index from which all subsequent are good
     for i in range(len(ks)):
         if good[i:].all():
-            return float(ks[i])
-    return float(ks[-1])
+            return PlateauResult(float(ks[i]), plateau)
+    return PlateauResult(float(ks[-1]), plateau)

@@ -48,7 +48,8 @@ def main(argv=None):
         print(f"{k:8.1f} {aw[i]:10.1f} {mw[i]:10.1f} {fu[i]:9.3f} "
               f"{uu[i]:7.3f}")
     thr = plateau_threshold(ks, aw)
-    print(f"[sim] queue-time plateau threshold: k >= {thr}")
+    print(f"[sim] queue-time plateau threshold: k >= {thr.threshold} "
+          f"(plateau {thr.plateau:.1f}s)")
     if args.baselines:
         bl = run_baselines(wl, s_props=[args.init_prop])
         for name, m in bl.items():

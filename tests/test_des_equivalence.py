@@ -1,21 +1,24 @@
-"""Equivalence suite: group-log DES == seed implementation, fused sweep ==
-per-experiment calls.
+"""Equivalence suite: group-log DES == seed implementation, scan engine ==
+while engine, batched sweep layouts == per-experiment calls.
 
 The group-log rewrite (`simulate_packet`) changes how per-job start times
 are produced (O(1) log appends + a vectorized post-pass) but must not change
 a single metric. `simulate_packet_reference` is the seed implementation kept
 verbatim as the oracle; these tests pin every DesResult field against it on
 hand-constructed cases and on reduced Lublin workloads across the (k, s)
-grid, and pin the fused (k x S) sweep engine against individual
-`simulate_packet` calls.
+grid. The event-budget scan engine (`simulate_packet_scan`, the batched-lane
+path of mode="chunked"/"fused") is pinned against both, and the sweep
+dispatch layouts (seq / chunked / fused / vmap_k / vmap_s) against each
+other in both dtypes.
 """
 import jax
 import numpy as np
 import pytest
 
-from repro.core import (efficiency_metrics, pack_workload, precision,
-                        resolve_ring, run_packet_grid, simulate_packet,
-                        simulate_packet_reference)
+from repro.core import (efficiency_metrics, event_budget, pack_workload,
+                        precision, resolve_ring, run_packet_grid,
+                        simulate_packet, simulate_packet_reference,
+                        simulate_packet_scan)
 from repro.workload.lublin import WorkloadParams, generate_workload
 
 from conftest import make_workload
@@ -110,6 +113,73 @@ class TestGroupLogEquivalence:
             simulate_packet_reference(pw, 4.0, s, m, priority=pri, t_max=tmx))
 
 
+class TestScanEngineEquivalence:
+    """The event-budget scan engine is the same simulator, re-laid-out."""
+
+    @pytest.mark.parametrize("case", HAND_CASES)
+    def test_hand_constructed(self, case):
+        submit, runtime, nodes, jtype, h, m, k, s = case
+        wl = make_workload(submit, runtime, nodes, jtype, h, m)
+        pw = pack_workload(wl)
+        assert_des_equal(simulate_packet_scan(pw, k, s, m),
+                         simulate_packet_reference(pw, k, s, m))
+
+    @pytest.mark.parametrize("k", [0.3, 2.0, 20.0, 500.0])
+    @pytest.mark.parametrize("s_prop", [0.05, 0.5])
+    def test_reduced_lublin_grid(self, small_workload, k, s_prop):
+        pw = pack_workload(small_workload)
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(s_prop)
+        assert_des_equal(simulate_packet_scan(pw, k, s, m),
+                         simulate_packet(pw, k, s, m))
+
+    def test_hetero_workload(self, hetero_workload):
+        pw = pack_workload(hetero_workload)
+        m = hetero_workload.params.nodes
+        s = hetero_workload.init_time_for_proportion(0.2)
+        for k in (0.5, 8.0, 100.0):
+            assert_des_equal(simulate_packet_scan(pw, k, s, m),
+                             simulate_packet(pw, k, s, m))
+
+    def test_float64_equivalence(self, small_workload):
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(0.3)
+        with precision.dtype_scope(np.float64):
+            pw = pack_workload(small_workload, np.float64)
+            assert_des_equal(simulate_packet_scan(pw, 2.0, s, m),
+                             simulate_packet(pw, 2.0, s, m),
+                             rtol=1e-12, atol=1e-9)
+
+    def test_priorities_preserved(self, small_workload):
+        pw = pack_workload(small_workload)
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(0.3)
+        h = pw.n_types
+        pri = np.linspace(2.0, 0.5, h)
+        tmx = np.full(h, 600.0)
+        assert_des_equal(
+            simulate_packet_scan(pw, 4.0, s, m, priority=pri, t_max=tmx),
+            simulate_packet(pw, 4.0, s, m, priority=pri, t_max=tmx))
+
+    def test_budget_is_sufficient_and_capacity_only(self, small_workload):
+        """event_budget(N) always drains; a bigger budget changes nothing;
+        a starved budget reports ok=False instead of lying."""
+        pw = pack_workload(small_workload)
+        m = small_workload.params.nodes
+        s = small_workload.init_time_for_proportion(0.3)
+        base = simulate_packet_scan(pw, 2.0, s, m)
+        assert np.asarray(base.ok)
+        roomy = simulate_packet_scan(pw, 2.0, s, m,
+                                     budget=2 * event_budget(pw.n_jobs))
+        assert_des_equal(base, roomy)
+        # segment length is a scheduling knob, not a policy
+        segged = simulate_packet_scan(pw, 2.0, s, m, seg=64)
+        assert_des_equal(base, segged)
+        # (budget rounds up to a segment multiple, so pin seg too)
+        starved = simulate_packet_scan(pw, 2.0, s, m, budget=8, seg=8)
+        assert not np.asarray(starved.ok)
+
+
 class TestFusedSweepEquivalence:
     def test_fused_grid_matches_per_experiment(self, small_workload):
         """The fused (k x S) lane engine == one simulate_packet per cell."""
@@ -133,10 +203,12 @@ class TestFusedSweepEquivalence:
         assert np.asarray(grid.ok).all()
 
     def test_all_modes_agree(self, small_workload):
-        """seq / fused / vmap_k / vmap_s are dispatch layouts, not policies."""
+        """seq / chunked / fused / vmap_k / vmap_s are dispatch layouts,
+        not policies."""
         kw = dict(ks=[0.5, 8.0, 100.0], s_props=[0.05, 0.5])
         grids = {
             "seq": run_packet_grid(small_workload, mode="seq", **kw),
+            "chunked": run_packet_grid(small_workload, mode="chunked", **kw),
             "fused": run_packet_grid(small_workload, mode="fused", **kw),
             "vmap_k": run_packet_grid(small_workload, vmap_k=True, **kw),
             "vmap_s": run_packet_grid(small_workload, vmap_s=True, **kw),
@@ -148,19 +220,37 @@ class TestFusedSweepEquivalence:
                 np.testing.assert_allclose(
                     getattr(base, f), getattr(g, f), rtol=1e-5,
                     err_msg=f"{name}:{f}")
+            assert np.asarray(g.ok).all(), name
 
-    def test_float64_modes_agree_tightly(self, small_workload):
-        """Under the float64 opt-in, seq and fused are the same arithmetic
-        per lane — they must agree far below float32 resolution."""
+    def test_chunked_unsorts_lanes_correctly(self, small_workload):
+        """Chunking sorts lanes by predicted event count and pads the last
+        chunk; cells must come back in grid order regardless of the chunk
+        width (1-lane chunks = maximal permutation + padding churn)."""
+        kw = dict(ks=[0.5, 8.0, 100.0], s_props=[0.05, 0.5])
+        base = run_packet_grid(small_workload, mode="seq", **kw)
+        for chunk in (1, 2, 4, 64):
+            g = run_packet_grid(small_workload, mode="chunked",
+                                chunk_lanes=chunk, **kw)
+            np.testing.assert_allclose(base.avg_wait, g.avg_wait,
+                                       rtol=1e-5, err_msg=f"chunk={chunk}")
+            np.testing.assert_allclose(base.n_groups, g.n_groups,
+                                       err_msg=f"chunk={chunk}")
+
+    @pytest.mark.parametrize("mode", ["chunked", "fused"])
+    def test_float64_modes_agree_tightly(self, small_workload, mode):
+        """Under the float64 opt-in, seq and the batched layouts are the
+        same arithmetic per lane — they must agree far below float32
+        resolution."""
         kw = dict(ks=[0.5, 8.0, 100.0], s_props=[0.05, 0.5],
                   dtype=np.float64)
         a = run_packet_grid(small_workload, mode="seq", **kw)
-        b = run_packet_grid(small_workload, mode="fused", **kw)
+        b = run_packet_grid(small_workload, mode=mode, **kw)
         for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
                   "useful_util", "avg_run_wait"):
             np.testing.assert_allclose(getattr(a, f), getattr(b, f),
                                        rtol=1e-12, err_msg=f)
         assert a.avg_wait.dtype == np.float64
+        assert b.avg_wait.dtype == np.float64
 
     @pytest.mark.slow
     def test_fused_grid_full_s_axis(self, small_workload):

@@ -144,6 +144,33 @@ class TestGoldenFloat64:
         assert jnp.asarray(1.0).dtype == jnp.float32
 
 
+class TestGoldenScanEngine:
+    """One pass of the golden grid through the event-budget scan engine
+    (mode='chunked', the batched-lane layout): a dispatch-layout change
+    must reproduce the float64 golden reference like mode='seq' does.
+    Layout-vs-layout equivalence at width is covered by
+    test_des_equivalence; this pins the engine against the checked-in
+    reference so a scan-engine regression cannot hide behind a matching
+    regression in the while engine."""
+
+    def test_chunked_matches_golden(self, golden):
+        got = {}
+        for name, params in GOLDEN_WORKLOADS.items():
+            wl = generate_workload(params)
+            grid = run_packet_grid(wl, ks=GOLDEN_KS, s_props=GOLDEN_S_PROPS,
+                                   dtype=np.float64, mode="chunked")
+            got[name] = {f: np.asarray(getattr(grid, f)).tolist()
+                         for f in METRIC_FIELDS}
+            got[name]["n_groups"] = \
+                np.asarray(grid.n_groups).astype(int).tolist()
+            assert np.asarray(grid.ok).all()
+        for name, entry in golden["grids"].items():
+            for f in METRIC_FIELDS:
+                _assert_close(got[name][f], entry["packet"][f], f,
+                              1e-9, f"f64-chunked/{name}")
+            assert got[name]["n_groups"] == entry["packet"]["n_groups"]
+
+
 class TestGoldenFloat32:
     """float32 within study-derived tolerances AND schedule-identical."""
 
