@@ -22,6 +22,15 @@ Two sections, both recorded to ``benchmarks/results/BENCH_des.json`` (or
     ``REGRESSION_BAR`` (2.0), which `--smoke` (the CI gate) enforces via
     the exit code.
 
+  * ``cohort_ab`` — the workload-axis A/B: a 3-workload study run the
+    pre-cohort way (one `run_packet_grid` per workload, Python loop) vs as
+    ONE stacked cohort through `run_cohort_grid` (chunked [W, width]
+    dispatches and the all-lanes fused program). End-to-end study wall
+    clock through the public entry points, so packing/unstacking overhead
+    counts on both sides. ``cohort_vs_per_workload_ratio`` (best cohort
+    layout / per-workload) is gated at the same ``REGRESSION_BAR`` in
+    `--smoke`.
+
 Usage:
     python -m benchmarks.bench_des            # full (5000-job headline)
     python -m benchmarks.bench_des --smoke    # <= ~60 s CI-budget variant
@@ -129,6 +138,70 @@ def bench_engine_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
     }
 
 
+def bench_cohort_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
+    """The workload-axis A/B: sequential-per-workload vs cohort-batched.
+
+    A 3-workload homogeneous study (loads 0.85/0.90/0.95 — one cohort, the
+    same shape the paper's homogeneous half forms) timed end-to-end through
+    the public drivers: the pre-cohort layout loops `run_packet_grid` over
+    the workloads (each resolving its own single-workload mode, like the
+    old paper_sweep driver), the cohort layouts run `run_cohort_grid` on
+    the stacked batch. Warmup fills the shared jit caches, so best-of-R
+    measures compute + dispatch, not compilation.
+    """
+    from repro.core import group_workloads, run_cohort_grid, run_packet_grid
+
+    flows = {f"homog{load:.2f}": generate_workload(WorkloadParams(
+        n_jobs=n_jobs, nodes=nodes, load=load, homogeneous=True, seed=i + 1))
+        for i, load in enumerate((0.85, 0.90, 0.95))}
+    cohorts = group_workloads(flows, np.float32)
+    assert len(cohorts) == 1, [c.key for c in cohorts]
+    cohort = cohorts[0]
+    n_exp = len(flows) * len(ks) * len(s_props)
+
+    def per_workload():
+        return [jax.block_until_ready(run_packet_grid(wl, ks, s_props))
+                for wl in flows.values()]
+
+    def cohort_mode(mode):
+        return jax.block_until_ready(
+            run_cohort_grid(cohort, ks, s_props, mode=mode))
+
+    # interleave the arms within each repeat round: the ratio is the
+    # quantity under test, and shared-runner throughput drifts on a
+    # minutes scale, so measuring each arm's best-of back to back (as the
+    # engine A/B can afford with its ms-scale passes) would let drift
+    # masquerade as a layout difference across these seconds-scale studies
+    arms = {"per_workload": per_workload,
+            "chunked": lambda: cohort_mode("chunked"),
+            "fused": lambda: cohort_mode("fused")}
+    best = {}
+    for name, run in arms.items():
+        run()                                         # compile/warm caches
+        best[name] = np.inf
+    for _ in range(REPEATS):
+        for name, run in arms.items():
+            t0 = time.perf_counter()
+            run()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    base_s = best.pop("per_workload")
+    times = best
+    best_mode = min(times, key=times.get)
+    return {
+        "n_jobs": n_jobs, "nodes": nodes, "n_workloads": len(flows),
+        "n_k": len(ks), "n_s": len(s_props), "experiments": n_exp,
+        "n_devices": jax.device_count(),
+        "per_workload_study_s": base_s,
+        "cohort_chunked_study_s": times["chunked"],
+        "cohort_fused_study_s": times["fused"],
+        "per_workload_ms_per_experiment": base_s / n_exp * 1e3,
+        "cohort_ms_per_experiment": times[best_mode] / n_exp * 1e3,
+        "best_cohort_mode": best_mode,
+        "cohort_vs_per_workload_ratio": times[best_mode] / base_s,
+        "regression_bar": REGRESSION_BAR,
+    }
+
+
 def bench_grid(n_jobs: int, ks, s_props, nodes=100) -> dict:
     wl = generate_workload(WorkloadParams(
         n_jobs=n_jobs, nodes=nodes, load=0.9, homogeneous=True, seed=1))
@@ -157,14 +230,23 @@ def main(argv=None) -> int:
                     help="output JSON path (default: results/BENCH_des.json)")
     args = ap.parse_args(argv)
 
+    from repro.core import PAPER_INIT_PROPS, PAPER_SCALE_RATIOS
     if args.smoke:
         headline_n, scaling_ns = 1200, [300, 600, 1200]
         ks = [0.5, 2.0, 8.0, 50.0]
         s_props = [0.05, 0.5]
+        # cohort A/B wants a paper-SHAPED study: enough lanes that the
+        # per-workload baseline resolves to its batched layout (as the
+        # real driver does) and seconds-long passes that integrate over
+        # shared-runner noise, at a job count that fits the CI budget
+        cohort_n, cohort_ks, cohort_sp = (
+            600, list(PAPER_SCALE_RATIOS), list(PAPER_INIT_PROPS))
     else:
         headline_n, scaling_ns = 5000, [625, 1250, 2500, 5000]
         ks = [0.5, 1.0, 2.0, 4.0, 8.0, 20.0, 50.0, 200.0]
         s_props = [0.05, 0.2, 0.5]
+        cohort_n, cohort_ks, cohort_sp = (
+            1200, list(PAPER_SCALE_RATIOS), list(PAPER_INIT_PROPS))
 
     t_start = time.perf_counter()
     print(f"[bench_des] headline grid: {headline_n} jobs, "
@@ -183,6 +265,20 @@ def main(argv=None) -> int:
               f"{engine_ab[f'{mode}_ms_per_experiment']:8.1f} ms/exp")
     print(f"[bench_des]   best batched ({engine_ab['best_batched_mode']}) = "
           f"{engine_ab['batched_vs_seq_ratio']:.2f}x seq "
+          f"(bar: {REGRESSION_BAR}x)")
+
+    print(f"[bench_des] cohort A/B: 3-workload paper-shaped study, "
+          f"per-workload loop vs stacked cohort "
+          f"({3 * len(cohort_ks) * len(cohort_sp)} experiments, "
+          f"{cohort_n} jobs)")
+    cohort_ab = bench_cohort_ab(cohort_n, cohort_ks, cohort_sp)
+    print(f"[bench_des]   per-workload  {cohort_ab['per_workload_study_s'] * 1e3:8.0f} ms study "
+          f"({cohort_ab['per_workload_ms_per_experiment']:.1f} ms/exp)")
+    for mode in ("chunked", "fused"):
+        print(f"[bench_des]   cohort {mode:8s} "
+              f"{cohort_ab[f'cohort_{mode}_study_s'] * 1e3:5.0f} ms study")
+    print(f"[bench_des]   best cohort ({cohort_ab['best_cohort_mode']}) = "
+          f"{cohort_ab['cohort_vs_per_workload_ratio']:.2f}x per-workload "
           f"(bar: {REGRESSION_BAR}x)")
 
     scaling = []
@@ -204,6 +300,7 @@ def main(argv=None) -> int:
         "total_seconds": None,          # filled below
         "headline": headline,
         "engine_ab": engine_ab,
+        "cohort_ab": cohort_ab,
         "scaling_with_n": scaling,
     }
     out["total_seconds"] = time.perf_counter() - t_start
@@ -214,9 +311,11 @@ def main(argv=None) -> int:
           f"({out['total_seconds']:.1f}s total)")
 
     ok = (headline["speedup_group_log_vs_reference"] >= 2.0 and
-          engine_ab["batched_vs_seq_ratio"] <= REGRESSION_BAR)
+          engine_ab["batched_vs_seq_ratio"] <= REGRESSION_BAR and
+          cohort_ab["cohort_vs_per_workload_ratio"] <= REGRESSION_BAR)
     print(f"[bench_des] {'PASS' if ok else 'FAIL'}: group_log >= 2x "
-          f"reference AND best batched layout <= {REGRESSION_BAR}x seq")
+          f"reference AND best batched layout <= {REGRESSION_BAR}x seq "
+          f"AND cohort study <= {REGRESSION_BAR}x per-workload")
     return 0 if ok else 1
 
 

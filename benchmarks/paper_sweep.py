@@ -4,6 +4,17 @@
 paper §6-7.  Results land in benchmarks/results/paper_grid.json and are read
 by the per-figure benchmark functions in benchmarks/run.py.
 
+Cohort execution: the 6 workflows are no longer iterated sequentially in
+Python. `repro.core.cohort.group_workloads` partitions them by compile-time
+statics — under the default precision policy below, exactly two cohorts:
+3 heterogeneous flows (M=500, float64) and 3 homogeneous flows (M=100,
+float32) — and `run_cohort_grid` runs each cohort's whole W x 222-lane
+study as one batched program family (666 lanes per cohort instead of three
+sequential 222-lane sweeps). Per-workload results are unstacked back into
+the same paper_grid.json schema as before, so the figure code in
+benchmarks/run.py is untouched; per-cohort timing and the cohort sweep plan
+are persisted alongside (``cohorts`` / ``sweep_plan`` keys).
+
 Precision policy: the PR-2 tolerance study
 (benchmarks/results/BENCH_dtype.json) found 77-83% of paper-grid cells on
 5000-job HETEROGENEOUS flows schedule differently in float32 vs float64
@@ -13,6 +24,9 @@ float64 for heterogeneous flows, float32 for homogeneous ones. ``--float64``
 forces everything up, ``--float32`` is the escape hatch that forces
 everything down (accepting the documented schedule flips); the per-workload
 decision and its reason are persisted in the grid provenance either way.
+
+``--workloads name1,name2`` restricts the study to a subset of the 6 flows
+(smoke runs and bisection then pay only for the workloads under test).
 """
 from __future__ import annotations
 
@@ -20,14 +34,20 @@ import json
 import os
 import time
 
+import jax
 import numpy as np
 
-from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, run_baselines,
-                        run_packet_grid, sweep_plan)
+from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
+                        group_workloads, run_baselines, run_cohort_grid,
+                        sweep_plan)
 from repro.workload.lublin import paper_workloads
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 GRID_PATH = os.path.join(RESULTS_DIR, "paper_grid.json")
+
+GRID_FIELDS = ("avg_wait", "med_wait", "avg_qlen", "full_util",
+               "useful_util", "avg_run_wait", "n_groups", "ok")
+BASELINE_FIELDS = ("avg_wait", "med_wait", "full_util", "useful_util")
 
 
 def workload_dtype(wl, force_dtype=None) -> tuple[np.dtype, str]:
@@ -43,18 +63,36 @@ def workload_dtype(wl, force_dtype=None) -> tuple[np.dtype, str]:
         "(BENCH_dtype.json near-tie cascades)")
 
 
+def select_workloads(flows: dict, names) -> dict:
+    """Subset `flows` to the requested names, preserving study order."""
+    names = [n.strip() for n in names if n.strip()]
+    unknown = [n for n in names if n not in flows]
+    if unknown:
+        raise ValueError(f"unknown workloads {unknown}; "
+                         f"available: {sorted(flows)}")
+    return {name: flows[name] for name in flows if name in names}
+
+
 def run_full_grid(n_jobs: int | None = None, seed: int = 0,
-                  dtype=None, mode: str = "auto") -> dict:
+                  dtype=None, mode: str = "auto",
+                  workloads=None) -> dict:
     """n_jobs=None -> the paper's 5000; smaller for smoke runs.
 
     ``dtype=None`` (default) applies the per-workload policy of
     `workload_dtype`: float64 for heterogeneous flows, float32 for
     homogeneous ones. Passing a concrete dtype forces it for every
-    workload. The chosen dtype (with its reason) and the resolved sweep
-    plan are persisted alongside the metrics so downstream figure code and
-    cross-PR comparisons know exactly what produced them.
+    workload. ``workloads`` (iterable of names) restricts the study to a
+    subset of the 6 flows.
+
+    The flows are grouped into same-static cohorts and each cohort runs as
+    one batched study (`run_cohort_grid`); results are unstacked into the
+    per-workload schema the figure code reads, and the chosen dtypes (with
+    reasons), per-cohort sweep plans, and per-cohort timing are persisted
+    so downstream comparisons know exactly what produced them.
     """
     flows = paper_workloads(seed=seed)
+    if workloads is not None:
+        flows = select_workloads(flows, list(workloads))
     if n_jobs is not None:
         import dataclasses
         from repro.workload.lublin import generate_workload
@@ -63,33 +101,52 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
 
     n_lanes = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
     decisions = {name: workload_dtype(wl, dtype) for name, wl in flows.items()}
+    cohorts = group_workloads(flows, {name: d
+                                      for name, (d, _) in decisions.items()})
     out = {"scale_ratios": list(PAPER_SCALE_RATIOS),
            "init_props": list(PAPER_INIT_PROPS),
            "dtype": {name: d.name for name, (d, _) in decisions.items()},
            "dtype_reason": {name: why for name, (_, why) in decisions.items()},
-           "sweep_plan": sweep_plan(mode, n_lanes),
+           "sweep_plan": {}, "cohorts": {},
            "workload_digests": {name: wl.golden_digest()
                                 for name, wl in flows.items()},
            "workloads": {}, "baselines": {}, "timing": {}}
+
+    for cohort in cohorts:
+        w = cohort.n_workloads
+        t0 = time.time()
+        # run_cohort_grid returns host numpy, but block explicitly so the
+        # recorded wall clock measures completed compute, not dispatch,
+        # even if the unstacking path ever returns device arrays again.
+        grids = jax.block_until_ready(run_cohort_grid(cohort, mode=mode))
+        dt = time.time() - t0
+        out["sweep_plan"][cohort.label] = sweep_plan(mode, n_lanes, w)
+        out["cohorts"][cohort.label] = {
+            "workloads": list(cohort.names), "dtype": cohort.dtype.name,
+            "m_nodes": cohort.m_nodes, "n_jobs": cohort.n_jobs,
+            "seconds": dt, "experiments": w * n_lanes,
+            "sec_per_experiment": dt / (w * n_lanes)}
+        for name in cohort.names:
+            out["workloads"][name] = {
+                f: np.asarray(getattr(grids[name], f)).tolist()
+                for f in GRID_FIELDS}
+            out["timing"][name] = {
+                "seconds": dt / w, "experiments": n_lanes,
+                "sec_per_experiment": dt / (w * n_lanes),
+                "cohort": cohort.label}
+        print(f"[paper_sweep] cohort {cohort.label} "
+              f"({', '.join(cohort.names)}): {w * n_lanes} experiments in "
+              f"{dt:.1f}s ({dt / (w * n_lanes) * 1e3:.1f} ms/experiment, "
+              f"{cohort.dtype.name})", flush=True)
+
     for name, wl in flows.items():
         wl_dtype, _ = decisions[name]
         t0 = time.time()
-        grid = run_packet_grid(wl, dtype=wl_dtype, mode=mode)
-        dt = time.time() - t0
-        out["workloads"][name] = {
-            f: np.asarray(getattr(grid, f)).tolist()
-            for f in ("avg_wait", "med_wait", "avg_qlen", "full_util",
-                      "useful_util", "avg_run_wait", "n_groups", "ok")}
-        out["timing"][name] = {"seconds": dt, "experiments": n_lanes,
-                               "sec_per_experiment": dt / n_lanes}
-        print(f"[paper_sweep] {name}: {n_lanes} experiments in {dt:.1f}s "
-              f"({dt / n_lanes * 1e3:.1f} ms/experiment, "
-              f"{wl_dtype.name})", flush=True)
-        bl = run_baselines(wl, dtype=wl_dtype)
+        bl = jax.block_until_ready(run_baselines(wl, dtype=wl_dtype))
+        out["timing"][name]["baseline_seconds"] = time.time() - t0
         out["baselines"][name] = {
             alg: {f: np.asarray(getattr(m, f)).tolist()
-                  for f in ("avg_wait", "med_wait", "full_util",
-                            "useful_util")}
+                  for f in BASELINE_FIELDS}
             for alg, m in bl.items()}
     return out
 
@@ -106,19 +163,28 @@ def main():
                            "accepting the documented hetero-flow schedule "
                            "flips (BENCH_dtype.json)")
     ap.add_argument("--mode", default="auto",
-                    choices=("auto", "seq", "chunked", "fused", "vmap_k",
-                             "vmap_s"))
+                    choices=("auto", "seq", "chunked", "fused"),
+                    help="cohort dispatch layout (the legacy vmap_k/vmap_s "
+                         "layouts have no cohort form; use run_packet_grid "
+                         "directly for those A/Bs)")
+    ap.add_argument("--workloads", default=None, metavar="NAME1,NAME2",
+                    help="run only these flows (comma-separated subset of "
+                         "the 6 paper workflows), e.g. "
+                         "--workloads homog0.85,hetero0.85")
     args = ap.parse_args()
     dtype = (np.float64 if args.float64
              else np.float32 if args.float32 else None)
+    names = args.workloads.split(",") if args.workloads else None
     os.makedirs(RESULTS_DIR, exist_ok=True)
     t0 = time.time()
-    res = run_full_grid(dtype=dtype, mode=args.mode)
+    res = run_full_grid(dtype=dtype, mode=args.mode, workloads=names)
     res["total_seconds"] = time.time() - t0
     with open(GRID_PATH, "w") as f:
         json.dump(res, f)
     n = sum(t["experiments"] for t in res["timing"].values())
-    print(f"[paper_sweep] total: {n} Packet experiments (+12 baseline runs) "
+    n_bl = 2 * len(res["baselines"])
+    print(f"[paper_sweep] total: {n} Packet experiments in "
+          f"{len(res['cohorts'])} cohort stud(ies) (+{n_bl} baseline runs) "
           f"in {res['total_seconds']:.1f}s -> {GRID_PATH}")
 
 

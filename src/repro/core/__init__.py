@@ -2,6 +2,8 @@
 algorithm) with scale-ratio tuning, as a fixed-shape JAX discrete-event
 simulation plus the pure policy functions reused by the ML-cluster layer."""
 from repro.core import packet, precision
+from repro.core.cohort import (CohortKey, WorkloadCohort, cohort_key,
+                               group_workloads, stack_workloads)
 from repro.core.des import (DesResult, PackedWorkload, event_budget,
                             pack_workload, resolve_ring, simulate_packet,
                             simulate_packet_host, simulate_packet_reference,
@@ -9,17 +11,20 @@ from repro.core.des import (DesResult, PackedWorkload, event_budget,
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.core.sweep import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
-                              PlateauResult, lane_padding, lane_sharding,
-                              plateau_threshold, resolve_mode, run_baselines,
+                              PlateauResult, cohort_lane_sharding,
+                              lane_padding, lane_sharding, plateau_threshold,
+                              resolve_mode, run_baselines, run_cohort_grid,
                               run_packet_grid, sweep_plan)
 
 __all__ = [
-    "packet", "precision", "DesResult", "PackedWorkload", "event_budget",
-    "pack_workload", "resolve_ring", "simulate_packet",
+    "packet", "precision", "CohortKey", "WorkloadCohort", "cohort_key",
+    "group_workloads", "stack_workloads", "DesResult", "PackedWorkload",
+    "event_budget", "pack_workload", "resolve_ring", "simulate_packet",
     "simulate_packet_host", "simulate_packet_reference",
     "simulate_packet_scan", "Metrics",
     "efficiency_metrics", "simulate_backfill", "simulate_fcfs",
     "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS", "PlateauResult",
-    "lane_padding", "lane_sharding", "plateau_threshold", "resolve_mode",
-    "run_baselines", "run_packet_grid", "sweep_plan",
+    "cohort_lane_sharding", "lane_padding", "lane_sharding",
+    "plateau_threshold", "resolve_mode", "run_baselines", "run_cohort_grid",
+    "run_packet_grid", "sweep_plan",
 ]

@@ -1,0 +1,162 @@
+"""Workload cohorts: the workload axis of the batched sweep.
+
+The paper's study is 6 workflows x 37 scale ratios x 6 init proportions =
+1332 experiments. PR 3 batched the (k x S) grid of ONE workload into a
+222-lane program; this module batches the *workload* axis on top, so the
+whole study runs as a handful of fused XLA programs instead of 6 sequential
+per-workflow sweeps.
+
+Two workloads can share one program iff their compile-time statics match:
+cluster size M (a scalar operand whose value is shared by every lane of a
+dispatch), job count N and type count H (array shapes), the simulation
+dtype (jit cache key + x64 trace context), and the running-group ring size
+(loop-carried shape, derived ``min(M, N)``). `cohort_key` captures exactly
+that tuple; `group_workloads` partitions a named workload dict by it. The
+paper's 6 flows form exactly two cohorts under the default precision policy
+of benchmarks/paper_sweep.py:
+
+  * 3 heterogeneous flows — M=500, N=5000, float64 (near-tie cascades make
+    float32 schedules chaotic; see BENCH_dtype.json),
+  * 3 homogeneous flows  — M=100, N=5000, float32.
+
+`stack_workloads` packs each member (`repro.core.des.pack_workload`) and
+stacks the `PackedWorkload` pytrees along a new leading axis; the result is
+a valid PackedWorkload whose array leaves carry shape [W, ...] and whose
+static aux (n_types, n_jobs) is the shared value. `simulate_packet_scan`
+takes the packed workload as an operand, so
+``jax.vmap(..., in_axes=(0, 0, 0, None, None))`` over (pw, k, s) — nested
+over the existing lane vmap — yields one program covering W x lanes
+experiments without replicating any workload table per lane
+(`repro.core.sweep._packet_cohort_lanes` / `run_cohort_grid`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision
+from repro.core.des import PackedWorkload, pack_workload, resolve_ring
+from repro.workload.lublin import Workload, workload_statics
+
+
+class CohortKey(NamedTuple):
+    """Compile-time statics shared by every member of a cohort."""
+    m_nodes: int     # cluster size M (scalar operand, same for all lanes)
+    n_jobs: int      # N: array shapes + event budget
+    n_types: int     # H: per-type table shapes
+    dtype: str       # simulation precision (jit cache key / x64 context)
+    ring: int        # running-group buffer size (loop-carried shape)
+
+
+def cohort_key(wl: Workload, dtype=np.float32) -> CohortKey:
+    """The statics tuple deciding which stacked program a workload joins."""
+    m_nodes, n_jobs, n_types = workload_statics(wl)
+    return CohortKey(m_nodes, n_jobs, n_types, np.dtype(dtype).name,
+                     resolve_ring(m_nodes, n_jobs))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadCohort:
+    """Named workloads sharing one CohortKey, ready to run as one program."""
+    names: tuple[str, ...]
+    workloads: tuple[Workload, ...]
+    key: CohortKey
+
+    @property
+    def n_workloads(self) -> int:
+        return len(self.names)
+
+    @property
+    def m_nodes(self) -> int:
+        return self.key.m_nodes
+
+    @property
+    def n_jobs(self) -> int:
+        return self.key.n_jobs
+
+    @property
+    def ring(self) -> int:
+        return self.key.ring
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np.dtype(self.key.dtype)
+
+    @property
+    def label(self) -> str:
+        """Stable provenance label, e.g. ``M100-N5000-float32``."""
+        return f"M{self.key.m_nodes}-N{self.key.n_jobs}-{self.key.dtype}"
+
+    def pack(self) -> PackedWorkload:
+        """Members packed and stacked along a leading [W] workload axis.
+
+        Cached on first use: members and dtype are immutable, so repeated
+        studies over one cohort (different grids, modes, or the chunked
+        path's per-member row slices) skip the host repack and re-upload
+        the old per-workload driver paid on every `run_packet_grid` call.
+        """
+        cached = self.__dict__.get("_packed")
+        if cached is None:
+            cached = stack_workloads(self.workloads, self.dtype)
+            object.__setattr__(self, "_packed", cached)
+        return cached
+
+
+def stack_workloads(workloads: Sequence[Workload],
+                    dtype=np.float32) -> PackedWorkload:
+    """Pack same-static workloads and stack them along a leading axis.
+
+    The result is a PackedWorkload whose array leaves have shape [W, ...]
+    (including the scalar `t_last_submit`, which becomes [W]) and whose
+    static aux is the shared (n_types, n_jobs) — i.e. a batched operand for
+    ``jax.vmap(simulate_packet_scan, in_axes=(0, ...))``. Mismatched statics
+    raise immediately with the offending field named, instead of surfacing
+    as an opaque pytree/shape error inside jit.
+
+    float64 stacking enters the scoped x64 opt-in itself (nesting is safe),
+    so standalone callers need no extra `precision.dtype_scope`.
+    """
+    if not workloads:
+        raise ValueError("stack_workloads needs at least one workload")
+    stats = [workload_statics(wl) for wl in workloads]
+    for i, field in enumerate(("m_nodes", "n_jobs", "n_types")):
+        vals = sorted({s[i] for s in stats})
+        if len(vals) > 1:
+            raise ValueError(
+                f"cannot stack workloads with mismatched {field}: {vals}; "
+                f"split them into compatible cohorts with group_workloads()")
+    with precision.dtype_scope(dtype):
+        pws = [pack_workload(wl, dtype) for wl in workloads]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *pws)
+
+
+def group_workloads(flows: Mapping[str, Workload],
+                    dtypes=np.float32) -> list[WorkloadCohort]:
+    """Partition named workloads into batch-compatible cohorts.
+
+    ``dtypes`` is either one dtype for every workload or a mapping
+    ``name -> dtype`` (e.g. the per-workload precision policy of
+    benchmarks/paper_sweep.py, which runs heterogeneous flows in float64).
+    Cohorts come back in first-member insertion order, and members keep
+    their insertion order within each cohort, so provenance and result
+    files are stable across runs.
+    """
+    if isinstance(dtypes, Mapping):
+        missing = [n for n in flows if n not in dtypes]
+        if missing:
+            raise ValueError(f"no dtype given for workloads {missing}")
+        dtype_of = lambda name: np.dtype(dtypes[name])
+    else:
+        dtype_of = lambda name: np.dtype(dtypes)
+
+    members: dict[CohortKey, list[tuple[str, Workload]]] = {}
+    for name, wl in flows.items():
+        members.setdefault(cohort_key(wl, dtype_of(name)), []).append(
+            (name, wl))
+    return [WorkloadCohort(names=tuple(n for n, _ in mem),
+                           workloads=tuple(w for _, w in mem), key=key)
+            for key, mem in members.items()]

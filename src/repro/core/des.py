@@ -56,6 +56,15 @@ Two equivalent engines expose that loop:
     on CPU dragging [lanes, N] log state through lockstep iterations); the
     sweep's chunked/fused modes build on it. See repro.core.sweep.
 
+    The PackedWorkload is an *operand*, never a closure, and every one of
+    its array leaves (including the scalar `t_last_submit`) is safe to
+    batch: ``jax.vmap(simulate_packet_scan, in_axes=(0, 0, 0, None, None))``
+    over a `repro.core.cohort.stack_workloads`-stacked pytree runs W
+    same-static workloads in one program — the cohort layer of the sweep
+    (`run_cohort_grid`) nests exactly that over the per-lane vmap. Only the
+    aux statics (n_types, n_jobs) must agree across the batch; `cohort_key`
+    groups workloads so they do.
+
 Precision
 ---------
 The simulation dtype is set at `pack_workload(..., dtype=...)` and carried
@@ -444,6 +453,15 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         budget with early exit"): the budget is the analytic worst case
         (`event_budget(N)` ~ 3N), but a dispatch of short lanes pays only
         its own steps, rounded up to a segment.
+
+    `pw` is an ordinary operand and batches like any other: vmapping with
+    ``in_axes=(0, 0, 0, None, None)`` over a stacked PackedWorkload (see
+    `repro.core.cohort`) runs W same-shape workloads in one program, which
+    is how `run_cohort_grid` folds the paper's whole 6-workflow study into
+    two dispatched cohorts. Extra budget segments past a lane's drain point
+    are masked no-ops (active=False emits pad log keys and freezes state),
+    so per-lane results are independent of whatever else shares the
+    dispatch — the property every equivalence test in the suite leans on.
 
     Results are equivalent to `simulate_packet` lane-for-lane (the
     equivalence suite pins every DesResult field); `ok` is False only if

@@ -5,11 +5,14 @@ proportions), each "dozens of minutes" in Alea. Here one workload's whole
 (k x S) grid is flattened into a lane axis of len(ks) * len(s_props)
 experiments (222 per workload for the paper's grid) and driven through one
 of three dispatch layouts over the event-budget scan engine
-(`repro.core.des.simulate_packet_scan`):
+(`repro.core.des.simulate_packet_scan`); a fourth, *cohort*, layer batches
+the workload axis on top so the WHOLE study runs as a couple of programs
+(`run_cohort_grid`, one per group of same-static workloads):
 
   * ``"seq"``     — one cached-jit dispatch per experiment (the while-loop
     engine `simulate_packet`). Zero batching overhead; the baseline every
-    other mode is measured against.
+    other mode is measured against. Under `run_cohort_grid` this delegates
+    to per-workload sequential dispatch (the pre-cohort driver layout).
   * ``"chunked"`` — lanes sorted by *predicted event count* (monotone
     decreasing in k * s: large scale ratios starve groups of nodes, so the
     queue drains in few big groups) and processed as a few fixed-size
@@ -17,13 +20,26 @@ of three dispatch layouts over the event-budget scan engine
     the scan's segmented early exit stops each chunk near its own step
     count instead of the grid-wide worst case. This is the fastest layout
     on a single CPU device for paper-sized grids (see
-    benchmarks/results/BENCH_des.json).
+    benchmarks/results/BENCH_des.json). Under `run_cohort_grid` every
+    member's sorted chunks are interleaved through one sync-free dispatch
+    sequence over device row slices of the stacked operand (workload-FUSED
+    [W, width] chunk dispatches were measured and rejected — cache
+    pressure; see `_run_cohort_chunks`).
   * ``"fused"``   — ONE program over all lanes. The scalable layout: the
     lane axis is padded up to the next device-count multiple with sentinel
     lanes (copies of the last real lane, sliced off after the gather) and
     placed with a `NamedSharding` over all local devices, so the 222-lane
     paper grid shards on 2/4/8-device backends even though 222 is not a
-    power-of-two multiple.
+    power-of-two multiple. Under `run_cohort_grid` the program is [W, L]:
+    the lane axis keeps the padded sharding (PartitionSpec(None, "lane")),
+    the stacked workload axis is replicated, and one program covers
+    W x lanes experiments (666 for a 3-flow paper cohort).
+
+The workload axis exists because `simulate_packet_scan` takes the
+`PackedWorkload` as an *operand*: `repro.core.cohort.stack_workloads`
+stacks same-static workloads along a leading axis and the cohort kernel
+vmaps over (pw, k, s) with ``in_axes=(0, 0, 0, None, None)`` — nested over
+the per-lane vmap — so no workload table is ever replicated per lane.
 
 Why the scan engine: a vmapped `while_loop` (the PR-1 fused engine) carries
 the [lanes, N] group log through every lockstep iteration and scatters into
@@ -191,18 +207,20 @@ def lane_sharding(n_lanes: int, pad: bool = False):
     return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("lane"))
 
 
-def resolve_mode(mode: str, n_lanes: int) -> str:
+def resolve_mode(mode: str, n_lanes: int, n_workloads: int = 1) -> str:
     """Resolve mode='auto' to the concrete dispatch layout; validate others.
 
     Measured heuristics (benchmarks/results/BENCH_des.json, single CPU
-    device vs sharded backends):
+    device vs sharded backends), applied to the TOTAL experiment count
+    ``n_lanes * n_workloads`` (`n_lanes` stays the per-workload lane count;
+    ``n_workloads > 1`` is the cohort path of `run_cohort_grid`):
 
       * more than one device -> "fused": the padded lane axis shards, and
         per-device lane counts shrink with the device count.
-      * one device, >= CHUNKED_MIN_LANES lanes -> "chunked": sorted chunks
-        through the scan engine beat sequential dispatch on paper-sized
-        grids and stay within ~1.2x on small ones.
-      * one device, small grid -> "seq": nothing to amortize.
+      * one device, >= CHUNKED_MIN_LANES total experiments -> "chunked":
+        sorted chunks through the scan engine beat sequential dispatch on
+        paper-sized grids and stay within ~1.2x on small ones.
+      * one device, small study -> "seq": nothing to amortize.
 
     Any explicit mode must be one of SWEEP_MODES; unknown strings raise
     instead of silently falling through to a default layout.
@@ -212,23 +230,29 @@ def resolve_mode(mode: str, n_lanes: int) -> str:
             f"unknown sweep mode {mode!r}; available: {SWEEP_MODES}")
     if mode != "auto":
         return mode
-    if jax.device_count() > 1 and n_lanes >= jax.device_count():
+    total = n_lanes * max(1, int(n_workloads))
+    if jax.device_count() > 1 and total >= jax.device_count():
         return "fused"
-    return "chunked" if n_lanes >= CHUNKED_MIN_LANES else "seq"
+    return "chunked" if total >= CHUNKED_MIN_LANES else "seq"
 
 
-def sweep_plan(mode: str, n_lanes: int) -> dict:
+def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1) -> dict:
     """The resolve_mode decision plus its inputs, for benchmark provenance.
 
     `benchmarks/paper_sweep.py` persists this next to the metrics so a
     paper_grid.json records not just WHAT ran but WHY that layout was
-    picked (lane count, device count, padding, chunk width).
+    picked (lane count, workload/cohort layout, device count, padding,
+    chunk width). ``n_workloads > 1`` describes a cohort study: the plan
+    then reports the stacked [W, lanes] layout `run_cohort_grid` executes.
     """
-    resolved = resolve_mode(mode, n_lanes)
+    resolved = resolve_mode(mode, n_lanes, n_workloads)
+    n_workloads = max(1, int(n_workloads))
     return {
         "requested_mode": mode,
         "mode": resolved,
         "n_lanes": int(n_lanes),
+        "n_workloads": n_workloads,
+        "total_experiments": int(n_lanes) * n_workloads,
         "n_devices": int(jax.device_count()),
         "lane_pad": int(lane_padding(n_lanes)) if resolved == "fused" else 0,
         "chunk_lanes": CHUNK_LANES if resolved == "chunked" else None,
@@ -279,6 +303,177 @@ def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring):
         s_lanes = jax.device_put(s_lanes, sharding)
     out = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring)
     return jax.tree.map(lambda x: np.asarray(x)[:L], out)
+
+
+# --------------------------------------------------------------------------
+# Cohort layer: the workload axis (repro.core.cohort).
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("m_nodes", "ring"))
+def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring):
+    """[W]-stacked workloads x [W, L] lanes: one program, W * L experiments.
+
+    The outer vmap batches the PackedWorkload operand itself
+    (in_axes=(0, 0, 0, None, None)); the inner vmap is the existing lane
+    axis. Static aux (n_types, n_jobs) is shared by construction
+    (`repro.core.cohort.stack_workloads` validates), so the jit cache keys
+    on one shape for the whole cohort.
+    """
+    lanes = jax.vmap(_one_experiment_scan, in_axes=(None, 0, 0, None, None))
+    return jax.vmap(lanes, in_axes=(0, 0, 0, None, None))(
+        spw, k_lanes, s_lanes, m_nodes, ring)
+
+
+# NOTE: there is deliberately no while-engine cohort kernel. Vmapping
+# `simulate_packet` over the workload axis (one (k, s) cell at a time,
+# in_axes=(0, None, 0, None, None)) is bitwise-correct but measured ~4x
+# SLOWER than per-workload sequential dispatch on one CPU device even at
+# W = 3: the event loop's gather/scatter body vectorizes as badly over
+# workloads as it did over lanes (the PR-1 fused-engine regression), and
+# lockstep iteration pays the slowest member's event count in every cell.
+# Small cohort studies therefore resolve to "seq" = per-workload delegation.
+
+
+def cohort_lane_sharding(n_lanes: int, pad: bool = False):
+    """NamedSharding for a [W, lanes] cohort batch: lane axis split over all
+    local devices, workload axis replicated.
+
+    Same contract as `lane_sharding` (None on one device; ``pad=True``
+    declares the caller padded the lane axis with `lane_padding` sentinel
+    lanes), but with a leading unsharded workload dimension — every device
+    computes all W workloads over its slice of lanes, so cohort and
+    single-workload fused dispatches balance identically.
+    """
+    devices = jax.devices()
+    if len(devices) <= 1:
+        return None
+    if not pad and n_lanes % len(devices) != 0:
+        return None
+    mesh = jax.sharding.Mesh(np.asarray(devices), ("lane",))
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(None, "lane"))
+
+
+def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int):
+    """Sorted chunks of every member's lanes, interleaved without syncs.
+
+    The measured single-device cohort layout. Workload-fusing each chunk
+    into a [W, width] block (`_packet_cohort_lanes` on narrow slices) was
+    tried first and LOSES on CPU for paper-sized jobs counts: every scan
+    step then walks W workloads' per-type tables (W x ~N floats), which
+    falls out of cache — 1.4x slower than per-workload dispatch at
+    N = 2500 on a 2-core CPU, the same locality cliff that made PR 3
+    chunk the lane axis. Instead each member's lanes run through the
+    single-workload chunk kernel (`_packet_lanes`, device-side row slices
+    of the stacked operand, so the jit cache is shared with
+    `run_packet_grid`), and the whole W x n_chunks dispatch sequence is
+    issued WITHOUT host syncs: outputs stay on device until the caller's
+    final conversion, so chunk c+1 (and workload w+1) enqueue while c
+    still computes, where the sequential driver blocks per chunk.
+
+    Lane order is computed once from the first member's (k, s) row and
+    shared: the k grid is identical across members and init times differ
+    only by a positive per-workload scalar (s_w = S/(1-S) * mean(e_w)), so
+    the k * s event-count proxy sorts every row identically.
+    """
+    W, L = int(k_l2.shape[0]), int(k_l2.shape[1])
+    n_chunks = max(1, -(-L // max(1, chunk)))
+    width = -(-L // n_chunks)
+    order = lane_order(np.asarray(k_l2[0]), np.asarray(s_l2[0]))
+    slices = []
+    for c in range(0, L, width):
+        idx = order[c:c + width]
+        pad = width - len(idx)
+        if pad:
+            idx = np.concatenate([idx, np.repeat(idx[-1:], pad)])
+        slices.append((idx, pad))
+    rows = []
+    for w in range(W):
+        pw_w = jax.tree.map(lambda x: x[w], spw)
+        chunks = [jax.tree.map(
+            lambda x: x[:width - pad] if pad else x,
+            _packet_lanes(pw_w, k_l2[w, idx], s_l2[w, idx], m_nodes, ring))
+            for idx, pad in slices]
+        rows.append(jax.tree.map(lambda *x: jnp.concatenate(x), *chunks))
+    gathered = jax.tree.map(lambda *x: jnp.stack(x), *rows)
+    inv = jnp.asarray(np.argsort(order, kind="stable"))
+    return jax.tree.map(lambda x: x[:, inv], gathered)
+
+
+def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring):
+    """All W x L lanes in one dispatch; lane axis padded + sharded."""
+    L = int(k_l2.shape[1])
+    pad = lane_padding(L)
+    if pad:
+        k_l2 = jnp.concatenate(
+            [k_l2, jnp.repeat(k_l2[:, -1:], pad, axis=1)], axis=1)
+        s_l2 = jnp.concatenate(
+            [s_l2, jnp.repeat(s_l2[:, -1:], pad, axis=1)], axis=1)
+    sharding = cohort_lane_sharding(L + pad, pad=True)
+    if sharding is not None:
+        k_l2 = jax.device_put(k_l2, sharding)
+        s_l2 = jax.device_put(s_l2, sharding)
+    out = _packet_cohort_lanes(spw, k_l2, s_l2, m_nodes, ring)
+    return jax.tree.map(lambda x: np.asarray(x)[:, :L], out)
+
+
+def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
+                    s_props: Sequence[float] = PAPER_INIT_PROPS,
+                    mode: str = "auto",
+                    chunk_lanes: int | None = None) -> dict:
+    """Per-workload [K, S] Metrics for every member of a `WorkloadCohort`,
+    computed as ONE batched study over the stacked workload axis.
+
+    Returns ``{name: Metrics}`` with leaves of shape [len(ks), len(s_props)]
+    — each entry identical (lane for lane) to
+    ``run_packet_grid(wl, ks, s_props, dtype=cohort.dtype)``, because the
+    cohort kernel batches the same scan engine over an extra workload axis
+    and per-lane results are independent of dispatch grouping (the cohort
+    equivalence suite pins this bitwise in both dtypes).
+
+    Modes are the sweep layouts applied to the [W, L] study: ``"chunked"``
+    dispatches sorted [W, width] blocks, ``"fused"`` runs one padded +
+    sharded program, ``"seq"`` delegates to per-workload sequential
+    dispatch (the pre-cohort driver layout — the measured-fastest choice
+    for studies too small to amortize batching; see the no-while-kernel
+    note above), and ``"auto"`` resolves from the TOTAL experiment count
+    W * L (`resolve_mode`). The legacy vmap_k/vmap_s layouts have no
+    cohort form. Init proportions are converted per member (s depends on
+    each workload's mean runtime), so the [W, L] init-time operand
+    genuinely varies across the workload axis.
+    """
+    K, S = len(ks), len(s_props)
+    W = cohort.n_workloads
+    resolved = resolve_mode(mode, K * S, W)
+    if resolved in ("vmap_k", "vmap_s"):
+        raise ValueError(
+            f"mode {resolved!r} has no cohort layout; use run_packet_grid "
+            f"per workload for the legacy column/row batchings")
+    if resolved == "seq":
+        return {name: run_packet_grid(wl, ks, s_props, dtype=cohort.dtype,
+                                      mode="seq")
+                for name, wl in zip(cohort.names, cohort.workloads)}
+
+    dtype = cohort.dtype
+    with precision.dtype_scope(dtype):
+        spw = cohort.pack()
+        m_nodes, ring = cohort.m_nodes, cohort.ring
+        ks_arr = jnp.asarray(ks, dtype)
+        s_mat = jnp.stack([jnp.asarray(
+            [wl.init_time_for_proportion(p) for p in s_props], dtype)
+            for wl in cohort.workloads])                    # [W, S]
+        k_l2 = jnp.broadcast_to(jnp.repeat(ks_arr, S), (W, K * S))
+        s_l2 = jnp.tile(s_mat, (1, K))
+        if resolved == "chunked":
+            lanes = _run_cohort_chunks(
+                spw, k_l2, s_l2, m_nodes, ring,
+                max(1, int(chunk_lanes or CHUNK_LANES)))
+        else:                   # fused
+            lanes = _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring)
+        grids = jax.tree.map(
+            lambda x: np.asarray(x).reshape((W, K, S) + x.shape[2:]), lanes)
+        return {name: jax.tree.map(lambda x, w=w: x[w], grids)
+                for w, name in enumerate(cohort.names)}
 
 
 def run_packet_grid(wl: Workload,

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Optional
+from typing import Mapping, Optional
 
 import numpy as np
 
@@ -109,9 +109,13 @@ def _hyper_gamma_ln_runtime(rng: np.random.Generator, log2n: np.ndarray) -> np.n
     return np.where(pick1, g1, g2)
 
 
-def _node_counts(rng: np.random.Generator, n: int, max_nodes: int,
+def _node_counts(rng: np.random.Generator, shape, max_nodes: int,
                  homogeneous: bool) -> np.ndarray:
-    """Lublin two-stage log-uniform with power-of-two bias."""
+    """Lublin two-stage log-uniform with power-of-two bias.
+
+    `shape` may be an int (one workload) or a tuple ``(R, n)`` (R replica
+    workloads drawn in one vectorized pass — see `generate_workload_batch`).
+    """
     uhi = np.log2(max_nodes)
     umed = (uhi - ULOW) * 0.625 + ULOW      # Lublin: medium point
     if homogeneous:
@@ -122,27 +126,28 @@ def _node_counts(rng: np.random.Generator, n: int, max_nodes: int,
         # runtimes, which reproduces the paper's 50%-init median collapse
         # (Fig 7) and the 5%-top / 50%-bottom plateau ordering (Fig 8).
         # See EXPERIMENTS.md §Paper-repro for the calibration study.
-        u = rng.uniform(3.0, 5.0, size=n)
+        u = rng.uniform(3.0, 5.0, size=shape)
         return np.clip(np.round(2.0 ** u), 1, max_nodes).astype(np.int64)
-    serial = rng.random(n) < SERIAL_PROB
-    low = rng.random(n) < UPROB
+    serial = rng.random(shape) < SERIAL_PROB
+    low = rng.random(shape) < UPROB
     u = np.where(low,
-                 rng.uniform(ULOW, umed, size=n),
-                 rng.uniform(umed, uhi, size=n))
-    pow2 = rng.random(n) < POW2_PROB
+                 rng.uniform(ULOW, umed, size=shape),
+                 rng.uniform(umed, uhi, size=shape))
+    pow2 = rng.random(shape) < POW2_PROB
     size = np.where(pow2, np.round(u), u)
     nodes = np.clip(np.round(2.0 ** size), 1, max_nodes).astype(np.int64)
     return np.where(serial, 1, nodes)
 
 
-def _arrivals(rng: np.random.Generator, n: int, horizon: float,
+def _arrivals(rng: np.random.Generator, shape, horizon: float,
               amplitude: float) -> np.ndarray:
     """Heavy-tailed gaps (exp of gamma), warped by a daily cycle, rescaled to
-    fill [0, horizon]."""
-    ln_gap = rng.gamma(AARR, BARR, size=n)
-    gaps = np.exp(ln_gap - ln_gap.mean())          # mean ~1, heavy tail
-    t = np.cumsum(gaps)
-    t = t / t[-1] * horizon
+    fill [0, horizon]. Shape-polymorphic along the leading axes: each row of
+    a ``(R, n)`` draw is an independent arrival process."""
+    ln_gap = rng.gamma(AARR, BARR, size=shape)
+    gaps = np.exp(ln_gap - ln_gap.mean(axis=-1, keepdims=True))  # mean ~1
+    t = np.cumsum(gaps, axis=-1)
+    t = t / t[..., -1:] * horizon
     # daily cycle: compress gaps at daytime peak, stretch at night, by warping
     # time through the inverse cumulative rate of
     # r(t) = 1 + A*cos(2*pi*(t - peak)/DAY).
@@ -151,8 +156,8 @@ def _arrivals(rng: np.random.Generator, n: int, horizon: float,
     # cumulative of r is t + A*DAY/(2pi)*sin(phase); invert approximately by
     # one Newton step from identity (amplitude < 1 keeps it monotone).
     warped = t - amplitude * DAY / (2 * np.pi) * np.sin(phase)
-    warped = np.sort(warped - warped.min())
-    return warped / max(warped[-1], 1e-9) * horizon
+    warped = np.sort(warped - warped.min(axis=-1, keepdims=True), axis=-1)
+    return warped / np.maximum(warped[..., -1:], 1e-9) * horizon
 
 
 def generate_workload(params: WorkloadParams) -> Workload:
@@ -183,6 +188,76 @@ def generate_workload(params: WorkloadParams) -> Workload:
     work = runtime * nodes
     return Workload(submit=submit, runtime=runtime, nodes=nodes.astype(np.int64),
                     work=work, jtype=jtype, params=params)
+
+
+def generate_workload_batch(params: WorkloadParams,
+                            n_replicas: int,
+                            name_fmt: str = "rep{r:03d}") -> dict[str, Workload]:
+    """R replica workloads of one parameter set, drawn in ONE vectorized pass.
+
+    Multi-seed replication studies (error bars over the paper grid) need R
+    same-shape workloads; calling `generate_workload` R times restarts the
+    generator pipeline per seed. Here every distribution is drawn once with
+    shape ``(R, n_jobs)`` from a single stream seeded by ``params.seed``,
+    then split row-wise, so the host cost is one pass over the batch. All
+    replicas share every static — ``(nodes, n_jobs, n_types)`` — by
+    construction, so the whole batch lands in one sweep cohort
+    (`repro.core.cohort.group_workloads`) and runs as one batched program.
+
+    Replica r is NOT the same stream as ``generate_workload(seed=...)`` for
+    any seed; determinism is per ``(params.seed, n_replicas)`` batch.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    rng = np.random.default_rng(params.seed)
+    shape = (n_replicas, params.n_jobs)
+
+    nodes = _node_counts(rng, shape, params.nodes, params.homogeneous)
+    ln_rt = _hyper_gamma_ln_runtime(rng, np.log2(nodes.astype(np.float64)))
+    if params.homogeneous:
+        mu = ln_rt.mean(axis=-1, keepdims=True)
+        ln_rt = mu + (ln_rt - mu) * params.homog_shrink
+    runtime = np.clip(np.exp(ln_rt), 1.0, 2 * DAY)
+
+    submit = _arrivals(rng, shape, params.horizon, params.daily_amplitude)
+
+    type_weights = 1.0 / np.arange(1, params.n_types + 1)
+    type_weights /= type_weights.sum()
+    jtype = rng.choice(params.n_types, size=shape,
+                       p=type_weights).astype(np.int64)
+
+    # per-replica load calibration, exactly as in generate_workload
+    raw_load = (runtime * nodes).sum(axis=-1, keepdims=True) / \
+        (params.nodes * params.horizon)
+    runtime = runtime * (params.load / raw_load)
+
+    out = {}
+    for r in range(n_replicas):
+        order = np.argsort(submit[r], kind="stable")
+        sub_r, rt_r = submit[r][order], runtime[r][order]
+        nd_r, jt_r = nodes[r][order], jtype[r][order]
+        out[name_fmt.format(r=r)] = Workload(
+            submit=sub_r, runtime=rt_r, nodes=nd_r.astype(np.int64),
+            work=rt_r * nd_r, jtype=jt_r, params=params)
+    return out
+
+
+def workload_statics(wl: Workload) -> tuple[int, int, int]:
+    """The static signature that decides batch compatibility: two workloads
+    can share one stacked sweep program iff these (plus the simulation
+    dtype/ring, which `repro.core.cohort.cohort_key` adds) all match."""
+    return (int(wl.params.nodes), wl.n_jobs, int(wl.params.n_types))
+
+
+def group_by_statics(flows: Mapping[str, Workload]) -> dict[tuple, list[str]]:
+    """Workload names grouped by `workload_statics`, insertion-ordered.
+
+    The workload-level half of cohort grouping: `repro.core.cohort` refines
+    these groups with the simulation dtype to build `WorkloadCohort`s."""
+    groups: dict[tuple, list[str]] = {}
+    for name, wl in flows.items():
+        groups.setdefault(workload_statics(wl), []).append(name)
+    return groups
 
 
 def paper_workloads(seed: int = 0) -> dict[str, Workload]:

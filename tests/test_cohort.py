@@ -1,0 +1,220 @@
+"""Cohort equivalence suite: the workload axis of the batched sweep.
+
+Pins the tentpole property of `repro.core.cohort` + `run_cohort_grid`:
+stacking same-static workloads along a leading axis and running them as one
+batched study returns, per workload, EXACTLY the metrics of the existing
+per-workload `run_packet_grid` path — bitwise, in both dtypes — because the
+scan engine's per-lane results are independent of whatever shares the
+dispatch. Also covers the grouping/stacking layer itself: statics-keyed
+cohort splitting, the clear mismatched-statics errors, and the vectorized
+multi-seed batch generator landing in one cohort.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CohortKey, cohort_key, group_workloads,
+                        run_cohort_grid, run_packet_grid, stack_workloads)
+from repro.workload.lublin import (WorkloadParams, generate_workload,
+                                   generate_workload_batch, group_by_statics,
+                                   workload_statics)
+
+KS = [0.5, 2.0, 8.0, 50.0, 300.0]
+SP = [0.05, 0.5]
+
+
+def _make_flows(loads, n_jobs=160, nodes=32, homogeneous=True, seed0=1,
+                **kw):
+    return {f"{'homog' if homogeneous else 'hetero'}{ld:.2f}":
+            generate_workload(WorkloadParams(
+                n_jobs=n_jobs, nodes=nodes, load=ld,
+                homogeneous=homogeneous, seed=seed0 + i, **kw))
+            for i, ld in enumerate(loads)}
+
+
+@pytest.fixture(scope="module")
+def homog_flows():
+    return _make_flows((0.85, 0.95))
+
+
+@pytest.fixture(scope="module")
+def hetero_flows():
+    return _make_flows((0.85, 0.90), n_jobs=140, nodes=64,
+                       homogeneous=False, seed0=3)
+
+
+def _assert_grids_equal(got, want, context=""):
+    for f in want._fields:
+        a, b = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        np.testing.assert_array_equal(a, b, err_msg=f"{context}: {f}")
+
+
+class TestGrouping:
+    def test_same_statics_one_cohort(self, homog_flows):
+        cohorts = group_workloads(homog_flows, np.float32)
+        assert len(cohorts) == 1
+        assert cohorts[0].names == tuple(homog_flows)
+        assert cohorts[0].key == CohortKey(32, 160, 8, "float32", 32)
+        assert cohorts[0].label == "M32-N160-float32"
+        for wl in homog_flows.values():
+            assert cohort_key(wl, np.float32) == cohorts[0].key
+
+    def test_mixed_statics_split_into_two_cohorts(self, homog_flows,
+                                                  hetero_flows):
+        mixed = {**homog_flows, **hetero_flows}
+        cohorts = group_workloads(mixed, np.float32)
+        assert len(cohorts) == 2
+        # first-member insertion order preserved
+        assert cohorts[0].names == tuple(homog_flows)
+        assert cohorts[1].names == tuple(hetero_flows)
+
+    def test_dtype_splits_cohorts(self, homog_flows):
+        names = list(homog_flows)
+        cohorts = group_workloads(homog_flows, {names[0]: np.float32,
+                                                names[1]: np.float64})
+        assert len(cohorts) == 2
+        assert {c.key.dtype for c in cohorts} == {"float32", "float64"}
+
+    def test_missing_dtype_mapping_raises(self, homog_flows):
+        with pytest.raises(ValueError, match="no dtype given"):
+            group_workloads(homog_flows, {list(homog_flows)[0]: np.float32})
+
+    def test_paper_flow_shapes_form_two_cohorts(self):
+        """The paper's 6-flow layout (hetero M=500 / homog M=100) under the
+        paper_sweep dtype policy collapses to exactly two cohorts."""
+        flows = {}
+        flows.update(_make_flows((0.85, 0.90, 0.95), n_jobs=120, nodes=100,
+                                 homogeneous=True))
+        flows.update(_make_flows((0.85, 0.90, 0.95), n_jobs=120, nodes=500,
+                                 homogeneous=False, seed0=11))
+        dtypes = {name: (np.float32 if wl.params.homogeneous else np.float64)
+                  for name, wl in flows.items()}
+        cohorts = group_workloads(flows, dtypes)
+        assert len(cohorts) == 2
+        assert sorted(c.n_workloads for c in cohorts) == [3, 3]
+
+    def test_group_by_statics_helper(self, homog_flows, hetero_flows):
+        mixed = {**homog_flows, **hetero_flows}
+        groups = group_by_statics(mixed)
+        assert len(groups) == 2
+        assert groups[(32, 160, 8)] == list(homog_flows)
+        key = workload_statics(next(iter(hetero_flows.values())))
+        assert groups[key] == list(hetero_flows)
+
+
+class TestStacking:
+    def test_stacked_leading_axis(self, homog_flows):
+        spw = stack_workloads(list(homog_flows.values()))
+        one = next(iter(homog_flows.values()))
+        assert spw.n_jobs == one.n_jobs and spw.n_types == 8
+        assert spw.submit.shape == (2, one.n_jobs)
+        assert spw.tj_prefw.shape == (2, 8, one.n_jobs + 1)
+        assert spw.t_last_submit.shape == (2,)
+
+    def test_mismatched_n_jobs_raises(self, homog_flows):
+        short = generate_workload(WorkloadParams(
+            n_jobs=80, nodes=32, load=0.9, homogeneous=True, seed=9))
+        with pytest.raises(ValueError, match="mismatched n_jobs"):
+            stack_workloads([next(iter(homog_flows.values())), short])
+
+    def test_mismatched_nodes_raises(self, homog_flows, hetero_flows):
+        with pytest.raises(ValueError, match="mismatched m_nodes"):
+            stack_workloads([next(iter(homog_flows.values())),
+                             generate_workload(WorkloadParams(
+                                 n_jobs=160, nodes=64, load=0.9,
+                                 homogeneous=True, seed=4))])
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError, match="at least one"):
+            stack_workloads([])
+
+    def test_cohort_pack_is_cached(self, homog_flows):
+        cohort = group_workloads(homog_flows, np.float32)[0]
+        assert cohort.pack() is cohort.pack()
+
+
+class TestCohortEquivalence:
+    """Stacked-cohort results bitwise-match per-workload run_packet_grid."""
+
+    @pytest.mark.parametrize("mode", ["chunked", "fused"])
+    def test_float32_homogeneous(self, homog_flows, mode):
+        cohort = group_workloads(homog_flows, np.float32)[0]
+        grids = run_cohort_grid(cohort, KS, SP, mode=mode)
+        assert set(grids) == set(homog_flows)
+        for name, wl in homog_flows.items():
+            want = run_packet_grid(wl, KS, SP, mode=mode)
+            _assert_grids_equal(grids[name], want, f"{mode}/{name}")
+            assert np.asarray(grids[name].ok).all()
+
+    @pytest.mark.parametrize("mode", ["chunked", "fused"])
+    def test_float64_heterogeneous(self, hetero_flows, mode):
+        cohort = group_workloads(hetero_flows, np.float64)[0]
+        grids = run_cohort_grid(cohort, KS, SP, mode=mode)
+        for name, wl in hetero_flows.items():
+            want = run_packet_grid(wl, KS, SP, dtype=np.float64, mode=mode)
+            assert np.asarray(grids[name].avg_wait).dtype == np.float64
+            _assert_grids_equal(grids[name], want, f"f64/{mode}/{name}")
+
+    def test_seq_delegates_to_per_workload(self, homog_flows):
+        cohort = group_workloads(homog_flows, np.float32)[0]
+        grids = run_cohort_grid(cohort, KS[:2], SP, mode="seq")
+        for name, wl in homog_flows.items():
+            want = run_packet_grid(wl, KS[:2], SP, mode="seq")
+            _assert_grids_equal(grids[name], want, f"seq/{name}")
+
+    def test_results_keyed_to_right_workload(self, homog_flows):
+        """Different loads produce different metrics; unstacking must not
+        permute members."""
+        cohort = group_workloads(homog_flows, np.float32)[0]
+        grids = run_cohort_grid(cohort, KS, SP, mode="fused")
+        a, b = (np.asarray(grids[n].avg_wait) for n in cohort.names)
+        assert not np.array_equal(a, b)
+
+    def test_legacy_vmap_modes_rejected(self, homog_flows):
+        cohort = group_workloads(homog_flows, np.float32)[0]
+        with pytest.raises(ValueError, match="no cohort layout"):
+            run_cohort_grid(cohort, KS, SP, mode="vmap_k")
+
+    def test_single_member_cohort(self, homog_flows):
+        name, wl = next(iter(homog_flows.items()))
+        cohort = group_workloads({name: wl}, np.float32)[0]
+        grids = run_cohort_grid(cohort, KS, SP, mode="chunked")
+        _assert_grids_equal(grids[name],
+                            run_packet_grid(wl, KS, SP, mode="chunked"),
+                            "W=1")
+
+
+class TestWorkloadBatch:
+    def test_replicas_share_statics_and_land_in_one_cohort(self):
+        reps = generate_workload_batch(WorkloadParams(
+            n_jobs=100, nodes=32, load=0.9, homogeneous=True, seed=5), 3)
+        assert list(reps) == ["rep000", "rep001", "rep002"]
+        assert len({workload_statics(wl) for wl in reps.values()}) == 1
+        assert len(group_workloads(reps, np.float32)) == 1
+
+    def test_replicas_differ_and_are_calibrated(self):
+        reps = generate_workload_batch(WorkloadParams(
+            n_jobs=100, nodes=32, load=0.9, homogeneous=True, seed=5), 3)
+        digests = [wl.golden_digest()["submit"] for wl in reps.values()]
+        assert len(set(digests)) == 3
+        for wl in reps.values():
+            assert wl.calculated_load() == pytest.approx(0.9)
+            assert (np.diff(wl.submit) >= 0).all()
+
+    def test_batch_is_deterministic(self):
+        p = WorkloadParams(n_jobs=60, nodes=16, load=0.85, seed=7)
+        a = generate_workload_batch(p, 2)
+        b = generate_workload_batch(p, 2)
+        for (na, wa), (nb, wb) in zip(a.items(), b.items()):
+            assert na == nb and wa.golden_digest() == wb.golden_digest()
+
+    def test_bad_replica_count_raises(self):
+        with pytest.raises(ValueError, match="n_replicas"):
+            generate_workload_batch(WorkloadParams(n_jobs=10), 0)
+
+    def test_single_workload_generator_unchanged(self):
+        """The shape-polymorphic helper refactor must not perturb the
+        1-D generator stream (golden digests elsewhere pin the full
+        pipeline; this pins the axis-aware arrival math directly)."""
+        wl = generate_workload(WorkloadParams(n_jobs=50, nodes=16, seed=3))
+        assert (np.diff(wl.submit) >= 0).all()
+        assert wl.submit[0] >= 0.0 and wl.n_jobs == 50

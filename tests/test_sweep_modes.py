@@ -45,9 +45,24 @@ class TestResolveMode:
         assert plan["requested_mode"] == "auto"
         assert plan["mode"] == resolve_mode("auto", 222)
         assert plan["n_lanes"] == 222
+        assert plan["n_workloads"] == 1
+        assert plan["total_experiments"] == 222
         assert plan["n_devices"] >= 1
         if plan["mode"] == "chunked":
             assert plan["chunk_lanes"] >= 1
+
+    def test_auto_counts_total_cohort_experiments(self):
+        """A cohort crosses the chunked threshold on W * lanes, not lanes:
+        a small grid over enough stacked workloads still batches."""
+        lanes = CHUNKED_MIN_LANES // 2
+        assert resolve_mode("auto", lanes, n_workloads=1) == "seq"
+        assert resolve_mode("auto", lanes, n_workloads=2) == "chunked"
+
+    def test_sweep_plan_cohort_layout(self):
+        plan = sweep_plan("auto", 222, n_workloads=3)
+        assert plan["n_lanes"] == 222
+        assert plan["n_workloads"] == 3
+        assert plan["total_experiments"] == 666
 
     def test_run_packet_grid_validates_mode(self, small_workload):
         with pytest.raises(ValueError, match="unknown sweep mode"):
@@ -143,8 +158,9 @@ class TestPlateauThreshold:
 _SHARD_SCRIPT = r"""
 import json
 import numpy as np
-from repro.core import lane_padding, run_packet_grid
-from repro.core.sweep import lane_sharding
+from repro.core import group_workloads, lane_padding, run_cohort_grid, \
+    run_packet_grid
+from repro.core.sweep import cohort_lane_sharding, lane_sharding
 from repro.workload.lublin import WorkloadParams, generate_workload
 
 import jax
@@ -156,8 +172,24 @@ ks, s_props = [0.5, 8.0, 100.0], [0.05, 0.5]      # 6 lanes: 6 % 4 != 0
 assert lane_padding(len(ks) * len(s_props)) == 2
 assert lane_sharding(8, pad=True) is not None     # padded count shards
 assert lane_sharding(6) is None                   # default stays strict
+assert cohort_lane_sharding(8, pad=True) is not None
+assert cohort_lane_sharding(6) is None
 seq = run_packet_grid(wl, ks=ks, s_props=s_props, mode="seq")
 fused = run_packet_grid(wl, ks=ks, s_props=s_props, mode="fused")
+
+# the cohort form of the same padded sharding: [W, lanes] with the lane
+# axis split over the 4 devices, members bitwise-matching solo fused runs
+flows = {"a": wl, "b": generate_workload(WorkloadParams(
+    n_jobs=80, nodes=32, load=0.95, homogeneous=True, seed=8))}
+cohort = group_workloads(flows, np.float32)[0]
+grids = run_cohort_grid(cohort, ks=ks, s_props=s_props, mode="fused")
+cohort_match = all(
+    np.array_equal(np.asarray(getattr(grids[name], f)),
+                   np.asarray(getattr(
+                       run_packet_grid(w, ks=ks, s_props=s_props,
+                                       mode="fused"), f)))
+    for name, w in flows.items() for f in grids[name]._fields)
+
 print(json.dumps({
     "seq_avg_wait": np.asarray(seq.avg_wait).tolist(),
     "fused_avg_wait": np.asarray(fused.avg_wait).tolist(),
@@ -165,6 +197,8 @@ print(json.dumps({
     "seq_n_groups": np.asarray(seq.n_groups).tolist(),
     "fused_ok": bool(np.asarray(fused.ok).all()),
     "shape": list(np.asarray(fused.avg_wait).shape),
+    "cohort_match": bool(cohort_match),
+    "cohort_ok": bool(all(np.asarray(g.ok).all() for g in grids.values())),
 }))
 """
 
@@ -190,3 +224,5 @@ def test_padded_sharding_multi_device_subprocess():
     np.testing.assert_allclose(out["fused_avg_wait"], out["seq_avg_wait"],
                                rtol=1e-5, atol=1e-5)
     assert out["fused_n_groups"] == out["seq_n_groups"]
+    assert out["cohort_ok"]
+    assert out["cohort_match"]    # [W, lanes] sharded == solo fused, bitwise
