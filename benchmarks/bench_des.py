@@ -22,6 +22,13 @@ Two sections, both recorded to ``benchmarks/results/BENCH_des.json`` (or
     ``REGRESSION_BAR`` (2.0), which `--smoke` (the CI gate) enforces via
     the exit code.
 
+  * ``chaos_ab`` — the fault-injection A/B: the same fused grid with
+    chaos off (normalized to the exact pre-chaos program) vs a live
+    fault sweep (failures + stragglers + requeues, R = N requeue rounds,
+    the sized event budget). ``chaos_vs_zero_ratio`` is gated at
+    ``REGRESSION_BAR`` in ``--smoke``: fault semantics may not make the
+    batched engine more than 2x slower per experiment.
+
   * ``cohort_ab`` — the workload-axis A/B: a 3-workload study run the
     pre-cohort way (one `run_packet_grid` per workload, Python loop) vs as
     ONE stacked cohort through `run_cohort_grid` (chunked [W, width]
@@ -134,6 +141,64 @@ def bench_engine_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
         "best_batched_mode": ("chunked" if chunked_ms <= fused_ms
                               else "fused"),
         "batched_vs_seq_ratio": best_batched / seq_ms,
+        "regression_bar": REGRESSION_BAR,
+    }
+
+
+def bench_chaos_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
+    """The fault-injection A/B: zero-chaos fused grid vs a live fault sweep.
+
+    Both arms run `run_packet_grid(mode="fused")` end to end — the zero
+    arm is the exact pre-chaos program (inert configs normalize away),
+    the chaos arm carries the per-lane fault stream, the group-log
+    requeue rounds, and the enlarged event budget. Arms are interleaved
+    within each repeat round like the cohort A/B: the ratio is the
+    quantity under test and runner throughput drifts over these
+    seconds-scale studies.
+    """
+    from repro.core import ChaosConfig, run_packet_grid
+
+    wl = generate_workload(WorkloadParams(
+        n_jobs=n_jobs, nodes=nodes, load=0.9, homogeneous=True, seed=1))
+    # N/4 requeue rounds bounds the log/budget shapes to the volume this
+    # fault intensity actually produces (~N/5 requeues per lane, with
+    # headroom), instead of the worst-case default R = N
+    chaos = ChaosConfig(mtbf_chip_hours=100.0, ckpt_period=300.0,
+                        straggler_prob=0.1, straggler_factor=4.0,
+                        straggler_deadline=2.0, seed=7,
+                        max_requeues=max(n_jobs // 4, 8))
+    n_exp = len(ks) * len(s_props)
+
+    def zero():
+        return jax.block_until_ready(
+            run_packet_grid(wl, ks, s_props, mode="fused"))
+
+    def with_chaos():
+        return jax.block_until_ready(run_packet_grid(
+            wl, ks, s_props, mode="fused", chaos=chaos,
+            on_budget_exhausted="raise"))
+
+    res = with_chaos()                                # compile + sanity
+    assert np.asarray(res.ok).all()
+    n_failures = int(np.sum(np.asarray(res.failures)))
+    n_kills = int(np.sum(np.asarray(res.straggler_kills)))
+    assert n_failures + n_kills > 0, "chaos arm injected nothing"
+    zero()
+    best = {"zero": np.inf, "chaos": np.inf}
+    for _ in range(REPEATS):
+        for name, run in (("zero", zero), ("chaos", with_chaos)):
+            t0 = time.perf_counter()
+            run()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {
+        "n_jobs": n_jobs, "nodes": nodes, "n_k": len(ks),
+        "n_s": len(s_props), "experiments": n_exp,
+        "n_devices": jax.device_count(),
+        "failures": n_failures, "straggler_kills": n_kills,
+        "requeues": int(np.sum(np.asarray(res.requeues))),
+        "zero_ms_per_experiment": best["zero"] / n_exp * 1e3,
+        "chaos_ms_per_experiment": best["chaos"] / n_exp * 1e3,
+        "chaos_vs_zero_ratio": best["chaos"] / best["zero"],
         "regression_bar": REGRESSION_BAR,
     }
 
@@ -267,6 +332,17 @@ def main(argv=None) -> int:
           f"{engine_ab['batched_vs_seq_ratio']:.2f}x seq "
           f"(bar: {REGRESSION_BAR}x)")
 
+    print(f"[bench_des] chaos A/B: fused grid, zero-chaos vs fault sweep "
+          f"({len(ks) * len(s_props)} experiments)")
+    chaos_ab = bench_chaos_ab(headline_n, ks, s_props)
+    print(f"[bench_des]   zero-chaos {chaos_ab['zero_ms_per_experiment']:8.1f} ms/exp")
+    print(f"[bench_des]   chaos      {chaos_ab['chaos_ms_per_experiment']:8.1f} ms/exp "
+          f"({chaos_ab['failures']} failures, "
+          f"{chaos_ab['straggler_kills']} kills, "
+          f"{chaos_ab['requeues']} requeues)")
+    print(f"[bench_des]   chaos = {chaos_ab['chaos_vs_zero_ratio']:.2f}x "
+          f"zero-chaos (bar: {REGRESSION_BAR}x)")
+
     print(f"[bench_des] cohort A/B: 3-workload paper-shaped study, "
           f"per-workload loop vs stacked cohort "
           f"({3 * len(cohort_ks) * len(cohort_sp)} experiments, "
@@ -300,6 +376,7 @@ def main(argv=None) -> int:
         "total_seconds": None,          # filled below
         "headline": headline,
         "engine_ab": engine_ab,
+        "chaos_ab": chaos_ab,
         "cohort_ab": cohort_ab,
         "scaling_with_n": scaling,
     }
@@ -312,9 +389,11 @@ def main(argv=None) -> int:
 
     ok = (headline["speedup_group_log_vs_reference"] >= 2.0 and
           engine_ab["batched_vs_seq_ratio"] <= REGRESSION_BAR and
+          chaos_ab["chaos_vs_zero_ratio"] <= REGRESSION_BAR and
           cohort_ab["cohort_vs_per_workload_ratio"] <= REGRESSION_BAR)
     print(f"[bench_des] {'PASS' if ok else 'FAIL'}: group_log >= 2x "
           f"reference AND best batched layout <= {REGRESSION_BAR}x seq "
+          f"AND chaos <= {REGRESSION_BAR}x zero-chaos "
           f"AND cohort study <= {REGRESSION_BAR}x per-workload")
     return 0 if ok else 1
 

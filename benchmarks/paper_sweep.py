@@ -27,6 +27,15 @@ decision and its reason are persisted in the grid provenance either way.
 
 ``--workloads name1,name2`` restricts the study to a subset of the 6 flows
 (smoke runs and bisection then pay only for the workloads under test).
+
+``--chaos`` re-runs the study as a fault sweep: every (workload, k, s)
+cell is crossed with a chaos lane axis of MTBF x checkpoint-period x
+straggler-factor cells (`chaos_grid_config`), the grids gain the fault
+metrics (lost_work/failures/straggler_kills/requeues/budget_exhausted)
+with a trailing chaos axis, and results land in
+``paper_chaos_grid.json`` so the zero-chaos study file stays untouched.
+Baselines are skipped under chaos — FCFS/backfill carry no fault
+semantics to compare against.
 """
 from __future__ import annotations
 
@@ -37,17 +46,43 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
-                        group_workloads, run_baselines, run_cohort_grid,
-                        sweep_plan)
+from repro.core import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS, ChaosConfig,
+                        chaos_axis_len, group_workloads, run_baselines,
+                        run_cohort_grid, sweep_plan)
 from repro.workload.lublin import paper_workloads
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 GRID_PATH = os.path.join(RESULTS_DIR, "paper_grid.json")
+CHAOS_GRID_PATH = os.path.join(RESULTS_DIR, "paper_chaos_grid.json")
 
 GRID_FIELDS = ("avg_wait", "med_wait", "avg_qlen", "full_util",
                "useful_util", "avg_run_wait", "n_groups", "ok")
+CHAOS_FIELDS = ("lost_work", "failures", "straggler_kills", "requeues",
+                "budget_exhausted")
 BASELINE_FIELDS = ("avg_wait", "med_wait", "full_util", "useful_util")
+
+# the --chaos study axes: every combination becomes one chaos lane cell
+CHAOS_MTBF_HOURS = (50.0, 200.0)
+CHAOS_CKPT_PERIODS = (120.0, 600.0)
+CHAOS_STRAGGLER_FACTORS = (1.5, 4.0)
+
+
+def chaos_grid_config(seed: int = 0) -> ChaosConfig:
+    """The fault sweep's chaos lane axis: MTBF x ckpt x straggler factor.
+
+    Scalar straggler probability/deadline broadcast across the cells; the
+    factor axis spans "stretch absorbed within the 2x deadline" (1.5) and
+    "stretch that triggers a deadline kill" (4.0), so the sweep exercises
+    both straggler outcomes.
+    """
+    mtbf, ckpt, factor = np.meshgrid(
+        np.asarray(CHAOS_MTBF_HOURS), np.asarray(CHAOS_CKPT_PERIODS),
+        np.asarray(CHAOS_STRAGGLER_FACTORS), indexing="ij")
+    return ChaosConfig(mtbf_chip_hours=mtbf.ravel(),
+                       ckpt_period=ckpt.ravel(),
+                       straggler_prob=0.1,
+                       straggler_factor=factor.ravel(),
+                       straggler_deadline=2.0, seed=seed)
 
 
 def workload_dtype(wl, force_dtype=None) -> tuple[np.dtype, str]:
@@ -75,7 +110,7 @@ def select_workloads(flows: dict, names) -> dict:
 
 def run_full_grid(n_jobs: int | None = None, seed: int = 0,
                   dtype=None, mode: str = "auto",
-                  workloads=None) -> dict:
+                  workloads=None, chaos: ChaosConfig | None = None) -> dict:
     """n_jobs=None -> the paper's 5000; smaller for smoke runs.
 
     ``dtype=None`` (default) applies the per-workload policy of
@@ -99,10 +134,14 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
         flows = {name: generate_workload(dataclasses.replace(
             wl.params, n_jobs=n_jobs)) for name, wl in flows.items()}
 
-    n_lanes = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
+    C = chaos_axis_len(chaos) if chaos is not None else 1
+    n_grid = len(PAPER_SCALE_RATIOS) * len(PAPER_INIT_PROPS)
+    n_lanes = n_grid * C
+    grid_fields = GRID_FIELDS + (CHAOS_FIELDS if chaos is not None else ())
     decisions = {name: workload_dtype(wl, dtype) for name, wl in flows.items()}
     cohorts = group_workloads(flows, {name: d
-                                      for name, (d, _) in decisions.items()})
+                                      for name, (d, _) in decisions.items()},
+                              chaos=chaos)
     out = {"scale_ratios": list(PAPER_SCALE_RATIOS),
            "init_props": list(PAPER_INIT_PROPS),
            "dtype": {name: d.name for name, (d, _) in decisions.items()},
@@ -111,6 +150,15 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
            "workload_digests": {name: wl.golden_digest()
                                 for name, wl in flows.items()},
            "workloads": {}, "baselines": {}, "timing": {}}
+    if chaos is not None:
+        # per-cell parameter values along the trailing chaos axis of every
+        # grid field (seed/requeue bound are in each cohort's sweep_plan)
+        out["chaos_cells"] = {
+            "axis_len": C,
+            **{f: np.broadcast_to(np.asarray(getattr(chaos, f), np.float64),
+                                  (C,)).tolist()
+               for f in ("mtbf_chip_hours", "ckpt_period", "straggler_prob",
+                         "straggler_factor", "straggler_deadline")}}
 
     for cohort in cohorts:
         w = cohort.n_workloads
@@ -118,9 +166,11 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
         # run_cohort_grid returns host numpy, but block explicitly so the
         # recorded wall clock measures completed compute, not dispatch,
         # even if the unstacking path ever returns device arrays again.
-        grids = jax.block_until_ready(run_cohort_grid(cohort, mode=mode))
+        grids = jax.block_until_ready(
+            run_cohort_grid(cohort, mode=mode, chaos=chaos))
         dt = time.time() - t0
-        out["sweep_plan"][cohort.label] = sweep_plan(mode, n_lanes, w)
+        out["sweep_plan"][cohort.label] = sweep_plan(mode, n_grid, w,
+                                                    chaos=chaos)
         out["cohorts"][cohort.label] = {
             "workloads": list(cohort.names), "dtype": cohort.dtype.name,
             "m_nodes": cohort.m_nodes, "n_jobs": cohort.n_jobs,
@@ -129,7 +179,7 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
         for name in cohort.names:
             out["workloads"][name] = {
                 f: np.asarray(getattr(grids[name], f)).tolist()
-                for f in GRID_FIELDS}
+                for f in grid_fields}
             out["timing"][name] = {
                 "seconds": dt / w, "experiments": n_lanes,
                 "sec_per_experiment": dt / (w * n_lanes),
@@ -139,15 +189,16 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
               f"{dt:.1f}s ({dt / (w * n_lanes) * 1e3:.1f} ms/experiment, "
               f"{cohort.dtype.name})", flush=True)
 
-    for name, wl in flows.items():
-        wl_dtype, _ = decisions[name]
-        t0 = time.time()
-        bl = jax.block_until_ready(run_baselines(wl, dtype=wl_dtype))
-        out["timing"][name]["baseline_seconds"] = time.time() - t0
-        out["baselines"][name] = {
-            alg: {f: np.asarray(getattr(m, f)).tolist()
-                  for f in BASELINE_FIELDS}
-            for alg, m in bl.items()}
+    if chaos is None:
+        for name, wl in flows.items():
+            wl_dtype, _ = decisions[name]
+            t0 = time.time()
+            bl = jax.block_until_ready(run_baselines(wl, dtype=wl_dtype))
+            out["timing"][name]["baseline_seconds"] = time.time() - t0
+            out["baselines"][name] = {
+                alg: {f: np.asarray(getattr(m, f)).tolist()
+                      for f in BASELINE_FIELDS}
+                for alg, m in bl.items()}
     return out
 
 
@@ -171,21 +222,31 @@ def main():
                     help="run only these flows (comma-separated subset of "
                          "the 6 paper workflows), e.g. "
                          "--workloads homog0.85,hetero0.85")
+    ap.add_argument("--chaos", action="store_true",
+                    help="cross the study with the fault-parameter grid "
+                         "(MTBF x ckpt period x straggler factor, "
+                         "chaos_grid_config) and write paper_chaos_grid.json "
+                         "instead of the zero-chaos study file")
+    ap.add_argument("--chaos-seed", type=int, default=0, metavar="SEED",
+                    help="fault-stream seed for --chaos (default 0)")
     args = ap.parse_args()
     dtype = (np.float64 if args.float64
              else np.float32 if args.float32 else None)
     names = args.workloads.split(",") if args.workloads else None
+    chaos = chaos_grid_config(seed=args.chaos_seed) if args.chaos else None
+    out_path = CHAOS_GRID_PATH if args.chaos else GRID_PATH
     os.makedirs(RESULTS_DIR, exist_ok=True)
     t0 = time.time()
-    res = run_full_grid(dtype=dtype, mode=args.mode, workloads=names)
+    res = run_full_grid(dtype=dtype, mode=args.mode, workloads=names,
+                        chaos=chaos)
     res["total_seconds"] = time.time() - t0
-    with open(GRID_PATH, "w") as f:
+    with open(out_path, "w") as f:
         json.dump(res, f)
     n = sum(t["experiments"] for t in res["timing"].values())
     n_bl = 2 * len(res["baselines"])
     print(f"[paper_sweep] total: {n} Packet experiments in "
           f"{len(res['cohorts'])} cohort stud(ies) (+{n_bl} baseline runs) "
-          f"in {res['total_seconds']:.1f}s -> {GRID_PATH}")
+          f"in {res['total_seconds']:.1f}s -> {out_path}")
 
 
 if __name__ == "__main__":

@@ -163,12 +163,20 @@ class ClusterSim:
 
     # ----------------------------------------------------------- failures
     def _maybe_fail(self, grp) -> Optional[float]:
+        """Absolute failure time of the group, or None if it survives.
+
+        Drawn lazily when the group's scheduled end is processed: a
+        failure is *resolved* at group end — the chips stay held for the
+        full duration (restart-in-place semantics), and the failure time
+        only decides how much work since the last checkpoint is lost.
+        The returned instant is ``t0 + t_fail``, the group start plus an
+        exponential draw at the slice's aggregate chip failure rate.
+        """
         if self.cfg.mtbf_chip_hours <= 0:
             return None
         rate = grp["m"] / (self.cfg.mtbf_chip_hours * 3600.0)
         t_fail = self.rng.exponential(1.0 / rate) if rate > 0 else np.inf
-        return grp["t0"] + grp["dur"] * 0 + t_fail \
-            if t_fail < grp["dur"] else None
+        return grp["t0"] + t_fail if t_fail < grp["dur"] else None
 
     # --------------------------------------------------------------- run
     def run(self):
@@ -207,8 +215,12 @@ class ClusterSim:
             self.useful_cs += run_span * m
             for job in grp["members"]:
                 job.done_work = job.work
-                job.finish = max(t0 + dur, job.finish if
-                                 np.isfinite(job.finish) else 0)
+                # members of a completing group always carry finish=inf
+                # (a job with a finite finish was fully credited earlier
+                # and never requeued), so this group's end IS the job's
+                # last completion time — including for jobs that failed
+                # or were killed in earlier groups and requeued here.
+                job.finish = t0 + dur
         self.free += m
         self._schedule()
 

@@ -4,27 +4,32 @@ simulation plus the pure policy functions reused by the ML-cluster layer."""
 from repro.core import packet, precision
 from repro.core.cohort import (CohortKey, WorkloadCohort, cohort_key,
                                group_workloads, stack_workloads)
-from repro.core.des import (DesResult, PackedWorkload, event_budget,
-                            pack_workload, resolve_ring, simulate_packet,
-                            simulate_packet_host, simulate_packet_reference,
-                            simulate_packet_scan)
+from repro.core.des import (ChaosConfig, DesResult, PackedWorkload,
+                            chaos_is_inert, chaos_uniforms, event_budget,
+                            pack_workload, resolve_max_requeues,
+                            resolve_ring, simulate_packet,
+                            simulate_packet_host,
+                            simulate_packet_reference, simulate_packet_scan)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.core.sweep import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
-                              PlateauResult, cohort_lane_sharding,
-                              lane_padding, lane_sharding, plateau_threshold,
-                              resolve_mode, run_baselines, run_cohort_grid,
+                              PlateauResult, chaos_axis_len, chaos_lane_grid,
+                              cohort_lane_sharding, lane_padding,
+                              lane_sharding, plateau_threshold, resolve_mode,
+                              run_baselines, run_cohort_grid,
                               run_packet_grid, sweep_plan)
 
 __all__ = [
     "packet", "precision", "CohortKey", "WorkloadCohort", "cohort_key",
-    "group_workloads", "stack_workloads", "DesResult", "PackedWorkload",
-    "event_budget", "pack_workload", "resolve_ring", "simulate_packet",
+    "group_workloads", "stack_workloads", "ChaosConfig", "DesResult",
+    "PackedWorkload", "chaos_is_inert", "chaos_uniforms", "event_budget",
+    "pack_workload",
+    "resolve_max_requeues", "resolve_ring", "simulate_packet",
     "simulate_packet_host", "simulate_packet_reference",
     "simulate_packet_scan", "Metrics",
     "efficiency_metrics", "simulate_backfill", "simulate_fcfs",
     "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS", "PlateauResult",
-    "cohort_lane_sharding", "lane_padding", "lane_sharding",
-    "plateau_threshold", "resolve_mode", "run_baselines", "run_cohort_grid",
-    "run_packet_grid", "sweep_plan",
+    "chaos_axis_len", "chaos_lane_grid", "cohort_lane_sharding",
+    "lane_padding", "lane_sharding", "plateau_threshold", "resolve_mode",
+    "run_baselines", "run_cohort_grid", "run_packet_grid", "sweep_plan",
 ]

@@ -39,7 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision
-from repro.core.des import PackedWorkload, pack_workload, resolve_ring
+from repro.core.des import (ChaosConfig, PackedWorkload, chaos_is_inert,
+                            pack_workload, resolve_max_requeues,
+                            resolve_ring)
 from repro.workload.lublin import Workload, workload_statics
 
 
@@ -50,13 +52,28 @@ class CohortKey(NamedTuple):
     n_types: int     # H: per-type table shapes
     dtype: str       # simulation precision (jit cache key / x64 context)
     ring: int        # running-group buffer size (loop-carried shape)
+    # requeue-round bound R (0 without chaos): sizes the group log (N + R)
+    # and the event budget, so it is a compile-time static like N. Appended
+    # last with a default so pre-chaos positional construction still works.
+    max_requeues: int = 0
 
 
-def cohort_key(wl: Workload, dtype=np.float32) -> CohortKey:
-    """The statics tuple deciding which stacked program a workload joins."""
+def cohort_key(wl: Workload, dtype=np.float32,
+               chaos: ChaosConfig | None = None) -> CohortKey:
+    """The statics tuple deciding which stacked program a workload joins.
+
+    A `chaos` config contributes its resolved requeue bound
+    (`resolve_max_requeues`): two workloads can share a chaos sweep's
+    program only if their log/budget shapes — which grow with R — match.
+    Inert configs (all-zero rates) normalize to no-chaos, R = 0, matching
+    the run drivers' normalization.
+    """
+    if chaos_is_inert(chaos):
+        chaos = None
     m_nodes, n_jobs, n_types = workload_statics(wl)
     return CohortKey(m_nodes, n_jobs, n_types, np.dtype(dtype).name,
-                     resolve_ring(m_nodes, n_jobs))
+                     resolve_ring(m_nodes, n_jobs),
+                     resolve_max_requeues(chaos, n_jobs))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,15 +152,18 @@ def stack_workloads(workloads: Sequence[Workload],
 
 
 def group_workloads(flows: Mapping[str, Workload],
-                    dtypes=np.float32) -> list[WorkloadCohort]:
+                    dtypes=np.float32,
+                    chaos: ChaosConfig | None = None) -> list[WorkloadCohort]:
     """Partition named workloads into batch-compatible cohorts.
 
     ``dtypes`` is either one dtype for every workload or a mapping
     ``name -> dtype`` (e.g. the per-workload precision policy of
     benchmarks/paper_sweep.py, which runs heterogeneous flows in float64).
-    Cohorts come back in first-member insertion order, and members keep
-    their insertion order within each cohort, so provenance and result
-    files are stable across runs.
+    ``chaos`` (when the study is a fault sweep) folds the requeue bound into
+    each key, since it changes the compiled log/budget shapes. Cohorts come
+    back in first-member insertion order, and members keep their insertion
+    order within each cohort, so provenance and result files are stable
+    across runs.
     """
     if isinstance(dtypes, Mapping):
         missing = [n for n in flows if n not in dtypes]
@@ -155,7 +175,7 @@ def group_workloads(flows: Mapping[str, Workload],
 
     members: dict[CohortKey, list[tuple[str, Workload]]] = {}
     for name, wl in flows.items():
-        members.setdefault(cohort_key(wl, dtype_of(name)), []).append(
+        members.setdefault(cohort_key(wl, dtype_of(name), chaos), []).append(
             (name, wl))
     return [WorkloadCohort(names=tuple(n for n, _ in mem),
                            workloads=tuple(w for _, w in mem), key=key)

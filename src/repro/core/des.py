@@ -65,6 +65,47 @@ Two equivalent engines expose that loop:
     aux statics (n_types, n_jobs) must agree across the batch; `cohort_key`
     groups workloads so they do.
 
+Chaos (fault injection)
+-----------------------
+Both engines accept an optional `ChaosConfig` operand porting the host-side
+`repro.cluster.scheduler.ClusterSim` fault semantics into the fixed-shape
+vectorized model, so MTBF / checkpoint-period / straggler parameters become
+sweep lane axes (see repro.core.sweep):
+
+  * per-group exponential chip-slice failures — every group formation g
+    consumes one row of a PRECOMPUTED per-lane uniform stream
+    ``u_all = uniform(fold_in(PRNGKey(seed), lane), (N + max_requeues, 2))``
+    and draws ``t_fail = -log(u2) * (mtbf * 3600) / m``. The stream is
+    indexed by the group counter, never by step position, so seq / chunked /
+    fused dispatch layouts see bit-identical draws (the differential suite
+    pins this);
+  * failures resolve at group END, exactly like ClusterSim's `_maybe_fail`:
+    the group holds its chips until the scheduled finish, work past the
+    last checkpoint (``floor(run_done / ckpt_period) * ckpt_period``) is
+    lost, and only the checkpointed fraction counts as useful;
+  * straggler stretch + deadline kill — with prob `straggler_prob` the run
+    span stretches by `straggler_factor`; if the stretched duration exceeds
+    ``straggler_deadline x expected``, the group is killed at the deadline
+    and only ``(deadline - s) * m / stretch`` of work is credited;
+  * requeue — the uncredited remainder re-enters the queue as an aggregate
+    per-type POOL (pool_w / pool_cnt / pool_oldest), applied at the finish
+    event: queue weight, oldest-submit and queue length all include the
+    pool, and the next formation of that type drains window + pool
+    together. The pool is an aggregate, so the requeued-job count and
+    oldest-submit are the full member count / group oldest whenever any
+    remainder exists — an upper bound that is exact for single-job groups
+    and zero-credit failures (ClusterSim credits members individually);
+  * bounded injection — at most `max_requeues` (default N) requeues are
+    injected per lane, so group count stays <= N + max_requeues and
+    `event_budget(N, max_requeues)` stays analytic. Hitting a genuinely
+    too-small user budget is reported as ``budget_exhausted=True`` in the
+    result instead of silently truncating the schedule.
+
+With ``chaos=None`` (the default) none of this is traced and the engines
+are bitwise-identical to their pre-chaos form; a ChaosConfig with
+``mtbf_chip_hours=0, straggler_prob=0`` is also bitwise-identical (every
+fault predicate is False and all accumulator increments are exact zeros).
+
 Precision
 ---------
 The simulation dtype is set at `pack_workload(..., dtype=...)` and carried
@@ -97,6 +138,32 @@ from repro.workload.lublin import Workload
 
 INF = jnp.inf
 RING = 512           # static fallback ring size (used when M is traced)
+
+
+def _register_optimization_barrier_batcher() -> None:
+    """Make `lax.optimization_barrier` usable under vmap on jax 0.4.x.
+
+    The chaos engine barriers its per-event float accumulates so both DES
+    engines round them identically (no engine-specific FMA fusion — see
+    `_chaos_outcome`). The primitive is elementwise-identity, so the rule
+    simply passes batch dims through; newer jax registers this upstream,
+    in which case (or if the private module moves) this is a no-op.
+    """
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:     # pragma: no cover - future jax relayout
+        return
+    if optimization_barrier_p in batching.primitive_batchers:
+        return
+
+    def _rule(args, dims):
+        return optimization_barrier_p.bind(*args), list(dims)
+
+    batching.primitive_batchers[optimization_barrier_p] = _rule
+
+
+_register_optimization_barrier_batcher()
 
 
 def resolve_ring(m_nodes, n_jobs: int, ring: int | None = None) -> int:
@@ -199,6 +266,142 @@ def pack_workload(wl: Workload, dtype=jnp.float32) -> PackedWorkload:
         t_last_submit=f(wl.submit[-1]), n_types=H, n_jobs=N)
 
 
+# --------------------------------------------------------------------------
+# Chaos: fault-injection parameters (ported from cluster/scheduler.py).
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Fault-injection operand for the DES engines (see module docstring).
+
+    The five fault parameters and `lane` are pytree children: scalars for a
+    single run, or equal-length arrays when vmapped as a chaos lane axis
+    (repro.core.sweep broadcasts them). `lane` is the dispatch-invariant
+    per-lane stream id — the sweep overwrites it with the flat grid index,
+    so a lane's failure draws do not depend on how lanes were chunked,
+    sorted or padded. `seed` and `max_requeues` are static aux (they size
+    the uniform stream and the event budget); ``max_requeues=None`` resolves
+    to the job count N at simulation time.
+    """
+    mtbf_chip_hours: object = 0.0     # 0 = no failures (ClusterSim default)
+    ckpt_period: object = 300.0
+    straggler_prob: object = 0.0
+    straggler_factor: object = 1.5
+    straggler_deadline: object = 2.0
+    lane: object = 0
+    seed: int = 0
+    max_requeues: int | None = None
+
+
+def _chaos_flatten(c: ChaosConfig):
+    children = (c.mtbf_chip_hours, c.ckpt_period, c.straggler_prob,
+                c.straggler_factor, c.straggler_deadline, c.lane)
+    return children, (c.seed, c.max_requeues)
+
+
+def _chaos_unflatten(aux, children):
+    return ChaosConfig(*children, seed=aux[0], max_requeues=aux[1])
+
+
+jax.tree_util.register_pytree_node(ChaosConfig, _chaos_flatten,
+                                   _chaos_unflatten)
+
+
+def resolve_max_requeues(chaos: ChaosConfig | None, n_jobs: int) -> int:
+    """Static requeue-injection budget R: 0 without chaos, N by default."""
+    if chaos is None:
+        return 0
+    if chaos.max_requeues is None:
+        return max(1, int(n_jobs))
+    return max(0, int(chaos.max_requeues))
+
+
+def chaos_is_inert(chaos: ChaosConfig | None) -> bool:
+    """True when `chaos` cannot inject any fault: None, or concrete
+    all-zero failure and straggler rates (e.g. the default ChaosConfig()).
+
+    The sweep/cohort drivers normalize inert configs to None before
+    compiling, so "chaos disabled" runs the exact pre-chaos programs —
+    same engines, same event-budget shapes, bitwise-identical metrics —
+    instead of a zero-rate chaos trace. Traced leaves (inside jit/vmap)
+    are conservatively treated as active.
+    """
+    if chaos is None:
+        return True
+    try:
+        mtbf = np.asarray(chaos.mtbf_chip_hours)
+        prob = np.asarray(chaos.straggler_prob)
+    except Exception:
+        return False
+    return bool(np.all(mtbf == 0) and np.all(prob == 0))
+
+
+def chaos_uniforms(chaos: ChaosConfig, dtype, n_groups_cap: int):
+    """The per-lane uniform stream: row g = (straggler draw, failure draw)
+    of the g-th group FORMED in this lane. Precomputed outside the event
+    loop and indexed by the group counter, so every dispatch layout (and
+    both engines) consumes identical draws. Exposed for hand tests that
+    re-derive expected fault outcomes."""
+    key = jax.random.fold_in(jax.random.PRNGKey(chaos.seed),
+                             jnp.asarray(chaos.lane, jnp.uint32))
+    return jax.random.uniform(key, (max(1, int(n_groups_cap)), 2),
+                              dtype=precision.canonical_dtype(dtype))
+
+
+class _ChaosOutcome(NamedTuple):
+    dur: jnp.ndarray        # effective duration (stretch/kill applied)
+    failed: jnp.ndarray     # failure strikes before the (effective) end
+    killed: jnp.ndarray     # straggler deadline kill (failure wins ties)
+    ckpt_done: jnp.ndarray  # checkpointed run seconds at failure time
+    credit: jnp.ndarray     # work credited toward completion (chip-seconds)
+    lost: jnp.ndarray       # chip-seconds lost past the last checkpoint
+
+
+def _chaos_outcome(chaos: ChaosConfig, u1, u2, inject, s, work, m_grp,
+                   dur0, dtype) -> _ChaosOutcome:
+    """Per-group fault outcome, mirroring ClusterSim's _schedule/_finish.
+
+    All branches are `jnp.where` with the no-fault value equal to the exact
+    pre-chaos expression, so a zero ChaosConfig changes no bits. `inject`
+    gates every fault (the bounded-requeue cap); precedence matches
+    ClusterSim: a failure before the effective end wins over a deadline
+    kill, which wins over plain completion.
+    """
+    m_f = m_grp.astype(dtype)
+    tiny = jnp.asarray(np.finfo(np.dtype(dtype)).tiny, dtype)
+    prob = jnp.asarray(chaos.straggler_prob, dtype)
+    factor = jnp.asarray(chaos.straggler_factor, dtype)
+    s_dead = jnp.asarray(chaos.straggler_deadline, dtype)
+    mtbf = jnp.asarray(chaos.mtbf_chip_hours, dtype)
+    ckpt = jnp.asarray(chaos.ckpt_period, dtype)
+
+    stretched = inject & (u1 < prob)
+    dur_s = jnp.where(stretched, s + (work / m_f) * factor, dur0)
+    deadline = s_dead * dur0                     # x expected duration
+    killed = inject & (dur_s > deadline)
+    dur = jnp.where(killed, deadline, dur_s)
+    t_fail = -jnp.log(jnp.maximum(u2, tiny)) * (mtbf * 3600.0) / m_f
+    failed = inject & (mtbf > 0) & (t_fail < dur)
+    run_done = jnp.maximum(jnp.minimum(t_fail, dur) - s, 0.0)
+    ckpt_done = jnp.floor(run_done / jnp.maximum(ckpt, tiny)) * ckpt
+    stretch = jnp.where(stretched, factor, jnp.ones((), dtype))
+    credit = jnp.where(
+        failed, ckpt_done * m_f / stretch,
+        jnp.where(killed, jnp.maximum(dur - s, 0.0) * m_f / stretch, work))
+    lost = jnp.where(failed, (run_done - ckpt_done) * m_f,
+                     jnp.zeros((), dtype))
+    # Barrier the outputs so XLA cannot fuse this arithmetic into the
+    # surrounding engine code (e.g. an FMA formed in one program but not
+    # another): every downstream consumer sees fault quantities rounded
+    # here, once. This pins HLO-level fusion only — LLVM may still
+    # contract mul+add at codegen — so the hard bitwise-parity guarantee
+    # for fault sweeps comes from all dispatch modes sharing the scan
+    # engine (see sweep._packet_one), with the barrier keeping that
+    # engine's scalar and vmapped compilations rounding alike.
+    return _ChaosOutcome(*jax.lax.optimization_barrier(
+        (dur, failed, killed, ckpt_done, credit, lost)))
+
+
 class DesState(NamedTuple):
     t: jnp.ndarray            # current time
     next_sub: jnp.ndarray     # index of next submission (global order)
@@ -216,6 +419,18 @@ class DesState(NamedTuple):
     useful_ns: jnp.ndarray    # useful node-seconds within the metric window
     n_groups: jnp.ndarray     # groups formed == next free log slot
     iters: jnp.ndarray        # diagnostic: outer loop iterations
+    # chaos state (zeros / untouched when chaos is None)
+    pool_w: jnp.ndarray       # [H] requeued remainder work per type
+    pool_cnt: jnp.ndarray     # [H] requeued job count per type
+    pool_oldest: jnp.ndarray  # [H] oldest submit among requeued jobs (+inf)
+    grp_jtype: jnp.ndarray    # [ring] type of each running group
+    grp_rem_w: jnp.ndarray    # [ring] remainder to requeue at finish
+    grp_rem_cnt: jnp.ndarray  # [ring] jobs in that remainder
+    grp_rem_oldest: jnp.ndarray  # [ring] oldest submit in that remainder
+    lost_work: jnp.ndarray    # chip-seconds lost past checkpoints
+    failures: jnp.ndarray
+    straggler_kills: jnp.ndarray
+    requeues: jnp.ndarray     # also the injection gate (vs max_requeues)
 
 
 class DesResult(NamedTuple):
@@ -227,6 +442,11 @@ class DesResult(NamedTuple):
     n_groups: jnp.ndarray
     makespan: jnp.ndarray
     ok: jnp.ndarray           # simulation drained within the iteration cap
+    budget_exhausted: jnp.ndarray  # iteration/step budget hit: truncated run
+    lost_work: jnp.ndarray    # chip-seconds lost to failures (not clipped)
+    failures: jnp.ndarray
+    straggler_kills: jnp.ndarray
+    requeues: jnp.ndarray
 
 
 def _window_overlap(a, b, t_end):
@@ -268,7 +488,8 @@ def _reconstruct_job_times(pw: PackedWorkload, log_key, log_t, log_m,
 
 def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
                     priority=None, t_max=None, max_iters: int | None = None,
-                    ring: int | None = None) -> DesResult:
+                    ring: int | None = None,
+                    chaos: ChaosConfig | None = None) -> DesResult:
     """Run the Packet algorithm DES (group-log event loop).
 
     Args:
@@ -280,9 +501,14 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
       m_nodes: cluster size M (traced scalar int).
       priority, t_max: optional [H] job-type priorities / wait normalizers.
       ring:    running-group buffer size; default `resolve_ring(m_nodes, N)`.
+      chaos:   optional ChaosConfig (module docstring "Chaos"). None traces
+               the exact pre-chaos graph; the log capacity and iteration
+               cap grow with the static requeue budget when set.
     """
     H, N = pw.n_types, pw.n_jobs
     ring = resolve_ring(m_nodes, N, ring)
+    R = resolve_max_requeues(chaos, N)
+    L = N + R                       # group-log capacity: G <= N + requeues
     dtype = precision.canonical_dtype(pw.submit.dtype)
     k = jnp.asarray(k, dtype)
     s_init = jnp.asarray(s_init, dtype)
@@ -292,15 +518,21 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
     tmax_j = (jnp.full((H,), 3600.0, dtype) if t_max is None
               else jnp.asarray(t_max, dtype))
     if max_iters is None:
-        max_iters = 4 * N + 64
+        max_iters = 4 * N + 64 + 2 * R
 
     t_end_metric = pw.t_last_submit
     type_ids = jnp.arange(H)
     key_pad = jnp.iinfo(jnp.int32).max     # unused log slots sort last
+    zero_f = jnp.zeros((), dtype)
+    zero_i = jnp.zeros((), jnp.int32)
+    one_i = jnp.ones((), jnp.int32)
+    u_all = None if chaos is None else chaos_uniforms(chaos, dtype, L)
 
     def sched_cond(carry):
         st = carry
         nonempty = st.tail > st.head
+        if chaos is not None:
+            nonempty = nonempty | (st.pool_cnt > 0)
         free_slot = jnp.any(jnp.isinf(st.grp_end))
         return (st.m_free > 0) & jnp.any(nonempty) & free_slot
 
@@ -309,6 +541,11 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         sum_w = (pw.tj_prefw[type_ids, st.tail] -
                  pw.tj_prefw[type_ids, st.head])
         oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
+        if chaos is not None:
+            # requeued remainder counts toward weight / age / emptiness
+            nonempty = nonempty | (st.pool_cnt > 0)
+            sum_w = sum_w + st.pool_w
+            oldest = jnp.minimum(oldest, st.pool_oldest)
         w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j, nonempty)
         # argmax index dtype follows x64 state; pin int32 so the log key
         # scatter below stays exact under the float64 opt-in.
@@ -317,16 +554,57 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)  # Step 4
         dur = packet.group_duration(work, s_j[j], m_grp)
         slot = jnp.argmax(jnp.isinf(st.grp_end))
-        t_fin = st.t + dur
 
         # O(1) group-log append; job times reconstructed after the loop
-        gslot = jnp.minimum(st.n_groups, N - 1)
+        gslot = jnp.minimum(st.n_groups, L - 1)
         head_w = pw.tj_prefw[j, st.head[j]]
 
-        busy = st.busy_ns + m_grp.astype(dtype) * _window_overlap(
+        upd = {}
+        if chaos is None:
+            t_fin = st.t + dur
+            useful_end = t_fin
+        else:
+            out = _chaos_outcome(chaos, u_all[gslot, 0], u_all[gslot, 1],
+                                 st.requeues < R, s_j[j], work, m_grp, dur,
+                                 dtype)
+            t_fin = st.t + out.dur
+            useful_end = jnp.where(out.failed,
+                                   st.t + s_j[j] + out.ckpt_done, t_fin)
+            rem = work - out.credit
+            rem = jnp.where(rem > 1e-9, rem, zero_f)
+            requeued = out.failed | out.killed
+            has_rem = requeued & (rem > 0)
+            memb_cnt = (st.tail[j] - st.head[j]) + st.pool_cnt[j]
+            upd = dict(
+                grp_jtype=st.grp_jtype.at[slot].set(j),
+                grp_rem_w=st.grp_rem_w.at[slot].set(
+                    jnp.where(has_rem, rem, zero_f)),
+                grp_rem_cnt=st.grp_rem_cnt.at[slot].set(
+                    jnp.where(has_rem, memb_cnt, zero_i)),
+                grp_rem_oldest=st.grp_rem_oldest.at[slot].set(
+                    jnp.where(has_rem, oldest[j], INF)),
+                pool_w=st.pool_w.at[j].set(zero_f),
+                pool_cnt=st.pool_cnt.at[j].set(zero_i),
+                pool_oldest=st.pool_oldest.at[j].set(INF),
+                lost_work=st.lost_work + out.lost,
+                failures=st.failures + jnp.where(out.failed, one_i, zero_i),
+                straggler_kills=st.straggler_kills + jnp.where(
+                    out.killed & ~out.failed, one_i, zero_i),
+                requeues=st.requeues + jnp.where(requeued, one_i, zero_i))
+
+        busy_inc = m_grp.astype(dtype) * _window_overlap(
             st.t, t_fin, t_end_metric)
-        useful = st.useful_ns + m_grp.astype(dtype) * _window_overlap(
-            st.t + s_j[j], t_fin, t_end_metric)
+        useful_inc = m_grp.astype(dtype) * _window_overlap(
+            st.t + s_j[j], useful_end, t_end_metric)
+        if chaos is not None:
+            # discourage fused mul-add rounding so the scan engine's
+            # separately-rounded accumulates usually match bit for bit
+            # (best effort in float32 — see sweep._packet_one; exact in
+            # float64, which is what tests assert bitwise cross-engine)
+            busy_inc, useful_inc = jax.lax.optimization_barrier(
+                (busy_inc, useful_inc))
+        busy = st.busy_ns + busy_inc
+        useful = st.useful_ns + useful_inc
 
         return st._replace(
             head=st.head.at[j].set(st.tail[j]),               # Step 3: drain all
@@ -338,7 +616,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
             log_m=st.log_m.at[gslot].set(m_grp),
             log_headw=st.log_headw.at[gslot].set(head_w),
             busy_ns=busy, useful_ns=useful,
-            n_groups=st.n_groups + 1)
+            n_groups=st.n_groups + 1, **upd)
 
     def cond(st: DesState):
         more = (st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end))
@@ -354,7 +632,12 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
 
         # queue-length integral over the elapsed interval (clipped to window)
         qlen = jnp.sum(st.tail - st.head).astype(st.t.dtype)
-        qint = st.qlen_int + qlen * _window_overlap(st.t, t_new, t_end_metric)
+        q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
+        if chaos is not None:
+            qlen = qlen + jnp.sum(st.pool_cnt).astype(st.t.dtype)
+            q_inc = jax.lax.optimization_barrier(
+                qlen * _window_overlap(st.t, t_new, t_end_metric))
+        qint = st.qlen_int + q_inc
 
         def on_submit(st):
             j = pw.jtype[jnp.minimum(st.next_sub, N - 1)]
@@ -362,9 +645,22 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
                                tail=st.tail.at[j].add(1))
 
         def on_finish(st):
+            upd = {}
+            if chaos is not None:
+                # apply the requeued remainder to the per-type pool NOW —
+                # the queue must not see it before the group's end
+                j_f = st.grp_jtype[slot]
+                upd = dict(
+                    pool_w=st.pool_w.at[j_f].add(st.grp_rem_w[slot]),
+                    pool_cnt=st.pool_cnt.at[j_f].add(st.grp_rem_cnt[slot]),
+                    pool_oldest=st.pool_oldest.at[j_f].min(
+                        st.grp_rem_oldest[slot]),
+                    grp_rem_w=st.grp_rem_w.at[slot].set(zero_f),
+                    grp_rem_cnt=st.grp_rem_cnt.at[slot].set(zero_i),
+                    grp_rem_oldest=st.grp_rem_oldest.at[slot].set(INF))
             return st._replace(m_free=st.m_free + st.grp_m[slot],
                                grp_end=st.grp_end.at[slot].set(INF),
-                               grp_m=st.grp_m.at[slot].set(0))
+                               grp_m=st.grp_m.at[slot].set(0), **upd)
 
         st = st._replace(t=t_new, qlen_int=qint)
         st = jax.lax.cond(take_sub, on_submit, on_finish, st)
@@ -376,22 +672,37 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         head=jnp.zeros((H,), jnp.int32), tail=jnp.zeros((H,), jnp.int32),
         m_free=m_nodes, grp_end=jnp.full((ring,), INF, dtype),
         grp_m=jnp.zeros((ring,), jnp.int32),
-        log_key=jnp.full((N,), key_pad, jnp.int32),
-        log_t=jnp.zeros((N,), dtype), log_m=jnp.zeros((N,), jnp.int32),
-        log_headw=jnp.zeros((N,), dtype),
+        log_key=jnp.full((L,), key_pad, jnp.int32),
+        log_t=jnp.zeros((L,), dtype), log_m=jnp.zeros((L,), jnp.int32),
+        log_headw=jnp.zeros((L,), dtype),
         qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
         useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32),
-        iters=jnp.zeros((), jnp.int32))
+        iters=jnp.zeros((), jnp.int32),
+        pool_w=jnp.zeros((H,), dtype), pool_cnt=jnp.zeros((H,), jnp.int32),
+        pool_oldest=jnp.full((H,), INF, dtype),
+        grp_jtype=jnp.zeros((ring,), jnp.int32),
+        grp_rem_w=jnp.zeros((ring,), dtype),
+        grp_rem_cnt=jnp.zeros((ring,), jnp.int32),
+        grp_rem_oldest=jnp.full((ring,), INF, dtype),
+        lost_work=jnp.zeros((), dtype), failures=jnp.zeros((), jnp.int32),
+        straggler_kills=jnp.zeros((), jnp.int32),
+        requeues=jnp.zeros((), jnp.int32))
 
     st = jax.lax.while_loop(cond, body, st0)
     start_t, run_start_t = _reconstruct_job_times(
         pw, st.log_key, st.log_t, st.log_m, st.log_headw, s_j)
-    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
-        jnp.all(st.head == st.tail) & jnp.all(jnp.isfinite(start_t))
+    drained = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
+        jnp.all(st.head == st.tail)
+    if chaos is not None:
+        drained = drained & jnp.all(st.pool_cnt == 0)
+    ok = drained & jnp.all(jnp.isfinite(start_t))
     return DesResult(start_t=start_t, run_start_t=run_start_t,
                      qlen_int=st.qlen_int, busy_ns=st.busy_ns,
                      useful_ns=st.useful_ns, n_groups=st.n_groups,
-                     makespan=st.t, ok=ok)
+                     makespan=st.t, ok=ok, budget_exhausted=~drained,
+                     lost_work=st.lost_work, failures=st.failures,
+                     straggler_kills=st.straggler_kills,
+                     requeues=st.requeues)
 
 
 # --------------------------------------------------------------------------
@@ -402,15 +713,18 @@ EVENT_BUDGET_SLACK = 64   # headroom over the 3N analytic step bound
 SCAN_SEG = 256            # default segment length (early-exit granularity)
 
 
-def event_budget(n_jobs: int) -> int:
+def event_budget(n_jobs: int, max_requeues: int = 0) -> int:
     """Safe per-grid step budget for `simulate_packet_scan`.
 
     Each scan step either consumes one event (a submission or a group
     completion: at most N + G of those) or forms one group (G of those),
-    and every group drains >= 1 job so G <= N. 3N + slack steps therefore
-    always drain a lane, whatever its (k, s).
+    and every group drains >= 1 job OR the pool content of one prior
+    requeue, so G <= N + R where R is the bounded requeue-injection count
+    (`ChaosConfig.max_requeues`; 0 without chaos). 3N + 2R + slack steps
+    therefore always drain a lane, whatever its (k, s) and fault draws.
     """
-    return 3 * max(1, int(n_jobs)) + EVENT_BUDGET_SLACK
+    return 3 * max(1, int(n_jobs)) + 2 * max(0, int(max_requeues)) + \
+        EVENT_BUDGET_SLACK
 
 
 class _ScanState(NamedTuple):
@@ -425,12 +739,25 @@ class _ScanState(NamedTuple):
     busy_ns: jnp.ndarray
     useful_ns: jnp.ndarray
     n_groups: jnp.ndarray
+    # chaos state (zeros / untouched when chaos is None)
+    pool_w: jnp.ndarray       # [H] requeued remainder work per type
+    pool_cnt: jnp.ndarray     # [H] requeued job count per type
+    pool_oldest: jnp.ndarray  # [H] oldest submit among requeued jobs
+    grp_jtype: jnp.ndarray    # [ring]
+    grp_rem_w: jnp.ndarray    # [ring] remainder to requeue at finish
+    grp_rem_cnt: jnp.ndarray  # [ring]
+    grp_rem_oldest: jnp.ndarray  # [ring]
+    lost_work: jnp.ndarray
+    failures: jnp.ndarray
+    straggler_kills: jnp.ndarray
+    requeues: jnp.ndarray
 
 
 def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
                          priority=None, t_max=None, ring: int | None = None,
                          budget: int | None = None,
-                         seg: int | None = None) -> DesResult:
+                         seg: int | None = None,
+                         chaos: ChaosConfig | None = None) -> DesResult:
     """Packet DES as a fixed-budget `lax.scan` — the batched-lane engine.
 
     Same policy and same per-step arithmetic as `simulate_packet`, but
@@ -470,7 +797,9 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
     """
     H, N = pw.n_types, pw.n_jobs
     ring = resolve_ring(m_nodes, N, ring)
-    budget = event_budget(N) if budget is None else max(1, int(budget))
+    R = resolve_max_requeues(chaos, N)
+    L_cap = N + R               # formation cap == uniform-stream length
+    budget = event_budget(N, R) if budget is None else max(1, int(budget))
     seg = SCAN_SEG if seg is None else max(1, int(seg))
     n_segs = -(-budget // seg)
     budget = n_segs * seg               # segments tile the log exactly
@@ -489,13 +818,19 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
     zero_f = jnp.zeros((), dtype)
     zero_i = jnp.zeros((), jnp.int32)
     one_i = jnp.ones((), jnp.int32)
+    u_all = None if chaos is None else chaos_uniforms(chaos, dtype, L_cap)
 
     def lane_active(st: _ScanState):
-        return ((st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end)) |
-                jnp.any(st.tail > st.head))
+        active = ((st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end)) |
+                  jnp.any(st.tail > st.head))
+        if chaos is not None:
+            active = active | jnp.any(st.pool_cnt > 0)
+        return active
 
     def step(st: _ScanState, _):
         nonempty = st.tail > st.head
+        if chaos is not None:
+            nonempty = nonempty | (st.pool_cnt > 0)
         free_mask = jnp.isinf(st.grp_end)
         queued = jnp.any(nonempty)
         active = lane_active(st)
@@ -507,6 +842,9 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         sum_w = (pw.tj_prefw[type_ids, st.tail] -
                  pw.tj_prefw[type_ids, st.head])
         oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
+        if chaos is not None:
+            sum_w = sum_w + st.pool_w
+            oldest = jnp.minimum(oldest, st.pool_oldest)
         w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j,
                                  nonempty)
         j = jnp.argmax(w).astype(jnp.int32)
@@ -514,12 +852,31 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)
         dur = packet.group_duration(work, s_j[j], m_grp)
         sslot = jnp.argmax(free_mask)
-        t_gfin = st.t + dur
         head_w = pw.tj_prefw[j, st.head[j]]
+        if chaos is None:
+            t_gfin = st.t + dur
+            useful_end = t_gfin
+        else:
+            gslot = jnp.minimum(st.n_groups, L_cap - 1)
+            out = _chaos_outcome(chaos, u_all[gslot, 0], u_all[gslot, 1],
+                                 st.requeues < R, s_j[j], work, m_grp, dur,
+                                 dtype)
+            t_gfin = st.t + out.dur
+            useful_end = jnp.where(out.failed,
+                                   st.t + s_j[j] + out.ckpt_done, t_gfin)
+            rem = work - out.credit
+            rem = jnp.where(rem > 1e-9, rem, zero_f)
+            requeued = do_sched & (out.failed | out.killed)
+            has_rem = requeued & (rem > 0)
+            memb_cnt = (st.tail[j] - st.head[j]) + st.pool_cnt[j]
         busy_inc = m_grp.astype(dtype) * _window_overlap(
             st.t, t_gfin, t_end_metric)
         useful_inc = m_grp.astype(dtype) * _window_overlap(
-            st.t + s_j[j], t_gfin, t_end_metric)
+            st.t + s_j[j], useful_end, t_end_metric)
+        if chaos is not None:
+            # same best-effort rounding contract as the while engine
+            busy_inc, useful_inc = jax.lax.optimization_barrier(
+                (busy_inc, useful_inc))
 
         # event step (submission or completion), masked unless do_event
         t_sub = jnp.where(st.next_sub < N,
@@ -529,7 +886,11 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         take_sub = t_sub <= t_efin
         t_new = jnp.where(take_sub, t_sub, t_efin)
         qlen = jnp.sum(st.tail - st.head).astype(dtype)
+        if chaos is not None:
+            qlen = qlen + jnp.sum(st.pool_cnt).astype(dtype)
         q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
+        if chaos is not None:
+            q_inc = jax.lax.optimization_barrier(q_inc)
         sub_j = pw.jtype[jnp.minimum(st.next_sub, N - 1)]
 
         do_submit = do_event & take_sub
@@ -553,7 +914,55 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
              jnp.where(do_sched, m_grp, zero_i),
              jnp.where(do_sched, head_w, zero_f))
 
-        st = _ScanState(
+        if chaos is None:
+            chaos_upd = {}
+        else:
+            # formation clears the drained pool and stashes the remainder
+            # in the ring; the finish event releases it back to the pool
+            j_f = st.grp_jtype[eslot]
+            pool_w = st.pool_w.at[j].set(
+                jnp.where(do_sched, zero_f, st.pool_w[j]))
+            pool_w = pool_w.at[j_f].add(
+                jnp.where(do_finish, st.grp_rem_w[eslot], zero_f))
+            pool_cnt = st.pool_cnt.at[j].set(
+                jnp.where(do_sched, zero_i, st.pool_cnt[j]))
+            pool_cnt = pool_cnt.at[j_f].add(
+                jnp.where(do_finish, st.grp_rem_cnt[eslot], zero_i))
+            pool_oldest = st.pool_oldest.at[j].set(
+                jnp.where(do_sched, INF, st.pool_oldest[j]))
+            pool_oldest = pool_oldest.at[j_f].min(
+                jnp.where(do_finish, st.grp_rem_oldest[eslot], INF))
+            grp_rem_w = st.grp_rem_w.at[sslot].set(
+                jnp.where(has_rem, rem, jnp.where(do_sched, zero_f,
+                                                  st.grp_rem_w[sslot])))
+            grp_rem_w = grp_rem_w.at[eslot].set(
+                jnp.where(do_finish, zero_f, grp_rem_w[eslot]))
+            grp_rem_cnt = st.grp_rem_cnt.at[sslot].set(
+                jnp.where(has_rem, memb_cnt, jnp.where(do_sched, zero_i,
+                                                       st.grp_rem_cnt[sslot])))
+            grp_rem_cnt = grp_rem_cnt.at[eslot].set(
+                jnp.where(do_finish, zero_i, grp_rem_cnt[eslot]))
+            grp_rem_oldest = st.grp_rem_oldest.at[sslot].set(
+                jnp.where(has_rem, oldest[j],
+                          jnp.where(do_sched, INF,
+                                    st.grp_rem_oldest[sslot])))
+            grp_rem_oldest = grp_rem_oldest.at[eslot].set(
+                jnp.where(do_finish, INF, grp_rem_oldest[eslot]))
+            chaos_upd = dict(
+                pool_w=pool_w, pool_cnt=pool_cnt, pool_oldest=pool_oldest,
+                grp_jtype=st.grp_jtype.at[sslot].set(
+                    jnp.where(do_sched, j, st.grp_jtype[sslot])),
+                grp_rem_w=grp_rem_w, grp_rem_cnt=grp_rem_cnt,
+                grp_rem_oldest=grp_rem_oldest,
+                lost_work=st.lost_work + jnp.where(do_sched, out.lost,
+                                                   zero_f),
+                failures=st.failures + jnp.where(do_sched & out.failed,
+                                                 one_i, zero_i),
+                straggler_kills=st.straggler_kills + jnp.where(
+                    do_sched & out.killed & ~out.failed, one_i, zero_i),
+                requeues=st.requeues + jnp.where(requeued, one_i, zero_i))
+
+        st = st._replace(
             t=jnp.where(do_event, t_new, st.t),
             next_sub=st.next_sub + jnp.where(do_submit, one_i, zero_i),
             head=head, tail=tail, m_free=m_free,
@@ -561,7 +970,8 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
             qlen_int=st.qlen_int + jnp.where(do_event, q_inc, zero_f),
             busy_ns=st.busy_ns + jnp.where(do_sched, busy_inc, zero_f),
             useful_ns=st.useful_ns + jnp.where(do_sched, useful_inc, zero_f),
-            n_groups=st.n_groups + jnp.where(do_sched, one_i, zero_i))
+            n_groups=st.n_groups + jnp.where(do_sched, one_i, zero_i),
+            **chaos_upd)
         return st, y
 
     def seg_cond(carry):
@@ -582,7 +992,16 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         m_free=m_nodes, grp_end=jnp.full((ring,), INF, dtype),
         grp_m=jnp.zeros((ring,), jnp.int32),
         qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
-        useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32))
+        useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32),
+        pool_w=jnp.zeros((H,), dtype), pool_cnt=jnp.zeros((H,), jnp.int32),
+        pool_oldest=jnp.full((H,), INF, dtype),
+        grp_jtype=jnp.zeros((ring,), jnp.int32),
+        grp_rem_w=jnp.zeros((ring,), dtype),
+        grp_rem_cnt=jnp.zeros((ring,), jnp.int32),
+        grp_rem_oldest=jnp.full((ring,), INF, dtype),
+        lost_work=jnp.zeros((), dtype), failures=jnp.zeros((), jnp.int32),
+        straggler_kills=jnp.zeros((), jnp.int32),
+        requeues=jnp.zeros((), jnp.int32))
     logs0 = (jnp.full((budget,), key_pad, jnp.int32),
              jnp.zeros((budget,), dtype),
              jnp.zeros((budget,), jnp.int32),
@@ -593,12 +1012,18 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
     log_key, log_t, log_m, log_headw = logs
     start_t, run_start_t = _reconstruct_job_times(
         pw, log_key, log_t, log_m, log_headw, s_j)
-    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
-        jnp.all(st.head == st.tail) & jnp.all(jnp.isfinite(start_t))
+    drained = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
+        jnp.all(st.head == st.tail)
+    if chaos is not None:
+        drained = drained & jnp.all(st.pool_cnt == 0)
+    ok = drained & jnp.all(jnp.isfinite(start_t))
     return DesResult(start_t=start_t, run_start_t=run_start_t,
                      qlen_int=st.qlen_int, busy_ns=st.busy_ns,
                      useful_ns=st.useful_ns, n_groups=st.n_groups,
-                     makespan=st.t, ok=ok)
+                     makespan=st.t, ok=ok, budget_exhausted=~drained,
+                     lost_work=st.lost_work, failures=st.failures,
+                     straggler_kills=st.straggler_kills,
+                     requeues=st.requeues)
 
 
 # --------------------------------------------------------------------------
@@ -723,12 +1148,17 @@ def simulate_packet_reference(pw: PackedWorkload, k, s_init, m_nodes,
         iters=jnp.zeros((), jnp.int32))
 
     st = jax.lax.while_loop(cond, body, st0)
-    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
-        jnp.all(st.head == st.tail) & jnp.all(jnp.isfinite(st.start_t))
+    drained = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
+        jnp.all(st.head == st.tail)
+    ok = drained & jnp.all(jnp.isfinite(st.start_t))
+    zf = jnp.zeros((), dtype)
+    zi = jnp.zeros((), jnp.int32)
     return DesResult(start_t=st.start_t, run_start_t=st.run_start_t,
                      qlen_int=st.qlen_int, busy_ns=st.busy_ns,
                      useful_ns=st.useful_ns, n_groups=st.n_groups,
-                     makespan=st.t, ok=ok)
+                     makespan=st.t, ok=ok, budget_exhausted=~drained,
+                     lost_work=zf, failures=zi, straggler_kills=zi,
+                     requeues=zi)
 
 
 @partial(jax.jit, static_argnames=("max_iters", "ring"))

@@ -42,6 +42,14 @@ class Metrics(NamedTuple):
     avg_run_wait: jnp.ndarray  # secondary: wait until job's own run start
     n_groups: jnp.ndarray
     ok: jnp.ndarray
+    # chaos lane outputs (zeros / False without a ChaosConfig). These stay
+    # out of SCALAR_METRIC_FIELDS: the golden grid and the dtype tolerance
+    # study pin the fault-free metric set, chaos suites pin these.
+    lost_work: jnp.ndarray         # chip-seconds lost past checkpoints
+    failures: jnp.ndarray          # failed groups
+    straggler_kills: jnp.ndarray   # deadline kills (failure wins ties)
+    requeues: jnp.ndarray          # requeue rounds (failed or killed)
+    budget_exhausted: jnp.ndarray  # event/iteration budget hit: truncated
 
 
 def efficiency_metrics(submit, result, m_nodes, t_last_submit) -> Metrics:
@@ -65,4 +73,9 @@ def efficiency_metrics(submit, result, m_nodes, t_last_submit) -> Metrics:
         useful_util=result.useful_ns / denom,
         avg_run_wait=run_wait.mean(),
         n_groups=result.n_groups,
-        ok=result.ok)
+        ok=result.ok,
+        lost_work=result.lost_work,
+        failures=result.failures,
+        straggler_kills=result.straggler_kills,
+        requeues=result.requeues,
+        budget_exhausted=result.budget_exhausted)

@@ -109,12 +109,17 @@ def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
         iters=jnp.zeros((), jnp.int32))
 
     st = jax.lax.while_loop(cond, body, st0)
-    ok = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & jnp.all(st.started)
+    drained = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end))
+    ok = drained & jnp.all(st.started)
+    zf = jnp.zeros((), dtype)
+    zi = jnp.zeros((), jnp.int32)
     return DesResult(start_t=st.start_t,
                      run_start_t=st.start_t + s_init,
                      qlen_int=st.qlen_int, busy_ns=st.busy_ns,
                      useful_ns=st.useful_ns, n_groups=st.n_started,
-                     makespan=st.t, ok=ok)
+                     makespan=st.t, ok=ok, budget_exhausted=~drained,
+                     lost_work=zf, failures=zi, straggler_kills=zi,
+                     requeues=zi)
 
 
 def simulate_fcfs(pw: PackedWorkload, s_init, m_nodes,

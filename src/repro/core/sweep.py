@@ -67,7 +67,9 @@ heterogeneous flows to float64 and records the per-workload decision.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import warnings
 from functools import partial
 from typing import NamedTuple, Sequence
 
@@ -76,8 +78,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision
-from repro.core.des import (event_budget, pack_workload, resolve_ring,
-                            simulate_packet, simulate_packet_scan)
+from repro.core.des import (ChaosConfig, chaos_is_inert, event_budget,
+                            pack_workload, resolve_max_requeues,
+                            resolve_ring, simulate_packet,
+                            simulate_packet_scan)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.workload.lublin import Workload
@@ -106,27 +110,50 @@ CHUNKED_MIN_LANES = 32    # below this, per-dispatch batching can't amortize
 FLOAT32_AVG_WAIT_RTOL = 0.031
 
 
-def _one_experiment(pw, k, s, m_nodes, ring):
-    res = simulate_packet(pw, k, s, m_nodes, ring=ring)
+def _one_experiment(pw, k, s, m_nodes, ring, chaos=None):
+    res = simulate_packet(pw, k, s, m_nodes, ring=ring, chaos=chaos)
     return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
 
 
-def _one_experiment_scan(pw, k, s, m_nodes, ring):
-    res = simulate_packet_scan(pw, k, s, m_nodes, ring=ring)
+def _one_experiment_scan(pw, k, s, m_nodes, ring, chaos=None):
+    res = simulate_packet_scan(pw, k, s, m_nodes, ring=ring, chaos=chaos)
     return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
 
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
-def _packet_one(pw, k, s, m_nodes, ring):
-    """Single experiment (the per-dispatch path of mode='seq')."""
-    return _one_experiment(pw, k, s, m_nodes, ring)
+def _packet_one(pw, k, s, m_nodes, ring, chaos=None):
+    """Single experiment (the per-dispatch path of mode='seq').
+
+    Without chaos this is the while-loop engine, bitwise-identical to every
+    pre-chaos release. Chaos runs dispatch the scan engine instead: the
+    sweep contract is that seq/chunked/fused agree *bitwise* on a seeded
+    fault sweep, and only a shared engine can promise that — LLVM
+    contracts mul+add into FMA at codegen, below HLO-level
+    `optimization_barrier`s, so the two engines' differently-shaped loop
+    bodies can legally round a metric accumulate differently in either
+    dtype (observed: 1-2 ulp in qlen_int). Cross-engine chaos agreement
+    is still enforced, engine-level, by tests/test_chaos.py: schedules
+    and counters exact, float accumulates allclose (tight in float64).
+    """
+    if chaos is None:
+        return _one_experiment(pw, k, s, m_nodes, ring)
+    return _one_experiment_scan(pw, k, s, m_nodes, ring, chaos)
 
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
-def _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring):
-    """Batched lanes through the event-budget scan engine (chunked/fused)."""
-    return jax.vmap(_one_experiment_scan, in_axes=(None, 0, 0, None, None))(
-        pw, k_lanes, s_lanes, m_nodes, ring)
+def _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
+    """Batched lanes through the event-budget scan engine (chunked/fused).
+
+    `chaos` is either None (the pre-chaos trace) or a ChaosConfig whose
+    leaves are [L]-aligned with the lane axis (ChaosConfig's static aux —
+    seed, max_requeues — keys the jit cache via the treedef)."""
+    if chaos is None:
+        return jax.vmap(_one_experiment_scan,
+                        in_axes=(None, 0, 0, None, None))(
+            pw, k_lanes, s_lanes, m_nodes, ring)
+    return jax.vmap(_one_experiment_scan,
+                    in_axes=(None, 0, 0, None, None, 0))(
+        pw, k_lanes, s_lanes, m_nodes, ring, chaos)
 
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
@@ -156,6 +183,76 @@ def _baseline_lanes(pw, s_vals, m_nodes, ring):
 
     return {"fcfs": jax.vmap(fcfs_one)(s_vals),
             "backfill": jax.vmap(bf_one)(s_vals)}
+
+
+def chaos_axis_len(chaos: ChaosConfig | None) -> int:
+    """Length C of the chaos lane axis: 1 for a scalar ChaosConfig, else the
+    shared leading dim of its array-valued fault parameters."""
+    if chaos is None:
+        return 1
+    sizes = {int(np.ndim(x) and np.shape(x)[0] or 1)
+             for x in (chaos.mtbf_chip_hours, chaos.ckpt_period,
+                       chaos.straggler_prob, chaos.straggler_factor,
+                       chaos.straggler_deadline)}
+    sizes.discard(1)
+    if len(sizes) > 1:
+        raise ValueError(f"ChaosConfig fault parameters have mismatched "
+                         f"chaos-axis lengths: {sorted(sizes)}")
+    return sizes.pop() if sizes else 1
+
+
+def chaos_lane_grid(chaos: ChaosConfig, n_grid: int, dtype) -> tuple:
+    """Broadcast a ChaosConfig over the flat (k, s) lane axis.
+
+    Returns ``(chaos_lanes, C)``: every fault parameter becomes a
+    [n_grid * C] array (grid-major, chaos-minor — cell (i_k, i_s) owns the
+    C consecutive lanes starting at (i_k * S + i_s) * C) and `lane` is
+    overwritten with the flat experiment index. The lane id is assigned in
+    GRID order, before any chunk sorting or fused padding, so the per-lane
+    uniform stream is identical across every dispatch layout.
+    """
+    C = chaos_axis_len(chaos)
+
+    def tile(x):
+        arr = jnp.broadcast_to(jnp.asarray(x, dtype), (C,))
+        return jnp.tile(arr, n_grid)
+
+    lanes = dataclasses.replace(
+        chaos,
+        mtbf_chip_hours=tile(chaos.mtbf_chip_hours),
+        ckpt_period=tile(chaos.ckpt_period),
+        straggler_prob=tile(chaos.straggler_prob),
+        straggler_factor=tile(chaos.straggler_factor),
+        straggler_deadline=tile(chaos.straggler_deadline),
+        lane=jnp.arange(n_grid * C, dtype=jnp.int32))
+    return lanes, C
+
+
+def _chaos_cell(chaos_lanes: ChaosConfig, i: int) -> ChaosConfig:
+    """Scalar ChaosConfig for one flat lane (the mode='seq' dispatch)."""
+    return jax.tree.map(lambda x: x[i], chaos_lanes)
+
+
+def _enforce_budget(metrics, policy: str, label: str):
+    """raise / warn / ignore when any lane hit its event budget.
+
+    A truncated lane means its schedule (and every metric) stops early —
+    silently mixing those cells into a grid is how the pre-PR-6 driver hid
+    starved runs, so the default is to raise.
+    """
+    if policy not in ("raise", "warn", "ignore"):
+        raise ValueError(f"on_budget_exhausted must be 'raise', 'warn' or "
+                         f"'ignore', got {policy!r}")
+    if policy == "ignore":
+        return
+    n_bad = int(np.asarray(metrics.budget_exhausted).sum())
+    if n_bad:
+        msg = (f"{label}: {n_bad} lane(s) exhausted the event budget — "
+               f"schedules are truncated; raise max_requeues/budget or "
+               f"pass on_budget_exhausted='ignore' to keep them")
+        if policy == "raise":
+            raise RuntimeError(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def predicted_lane_events(k_lanes, s_lanes) -> np.ndarray:
@@ -236,7 +333,8 @@ def resolve_mode(mode: str, n_lanes: int, n_workloads: int = 1) -> str:
     return "chunked" if total >= CHUNKED_MIN_LANES else "seq"
 
 
-def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1) -> dict:
+def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1,
+               chaos: ChaosConfig | None = None) -> dict:
     """The resolve_mode decision plus its inputs, for benchmark provenance.
 
     `benchmarks/paper_sweep.py` persists this next to the metrics so a
@@ -244,23 +342,49 @@ def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1) -> dict:
     picked (lane count, workload/cohort layout, device count, padding,
     chunk width). ``n_workloads > 1`` describes a cohort study: the plan
     then reports the stacked [W, lanes] layout `run_cohort_grid` executes.
+    A `chaos` config multiplies the lane axis by its fault-parameter length
+    C and records the fault grid (seed, requeue bound, parameter values)
+    so a chaos sweep's provenance pins the exact draws.
     """
+    if chaos_is_inert(chaos):
+        chaos = None        # mirror the run_* drivers' normalization
+    C = chaos_axis_len(chaos)
+    n_lanes = int(n_lanes) * C
     resolved = resolve_mode(mode, n_lanes, n_workloads)
     n_workloads = max(1, int(n_workloads))
-    return {
+    plan = {
         "requested_mode": mode,
         "mode": resolved,
-        "n_lanes": int(n_lanes),
+        "n_lanes": n_lanes,
         "n_workloads": n_workloads,
-        "total_experiments": int(n_lanes) * n_workloads,
+        "total_experiments": n_lanes * n_workloads,
         "n_devices": int(jax.device_count()),
         "lane_pad": int(lane_padding(n_lanes)) if resolved == "fused" else 0,
         "chunk_lanes": CHUNK_LANES if resolved == "chunked" else None,
         "chunked_min_lanes": CHUNKED_MIN_LANES,
     }
+    if chaos is not None:
+        plan["chaos"] = {
+            "axis_len": C,
+            "seed": int(chaos.seed),
+            "max_requeues": (None if chaos.max_requeues is None
+                             else int(chaos.max_requeues)),
+            "mtbf_chip_hours": np.asarray(chaos.mtbf_chip_hours,
+                                          np.float64).tolist(),
+            "ckpt_period": np.asarray(chaos.ckpt_period,
+                                      np.float64).tolist(),
+            "straggler_prob": np.asarray(chaos.straggler_prob,
+                                         np.float64).tolist(),
+            "straggler_factor": np.asarray(chaos.straggler_factor,
+                                           np.float64).tolist(),
+            "straggler_deadline": np.asarray(chaos.straggler_deadline,
+                                             np.float64).tolist(),
+        }
+    return plan
 
 
-def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int):
+def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int,
+                     chaos=None):
     """Sorted equal-width chunks through the scan engine, then unsort.
 
     The requested `chunk` width only sets the number of dispatches
@@ -270,6 +394,10 @@ def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int):
     3 x 64 + 30). Every chunk is padded to exactly that width (repeating
     its last lane) so all dispatches share one compiled program; the
     inverse permutation restores grid order before reshaping.
+
+    `chaos` (when given) carries [L]-aligned fault-parameter leaves and is
+    gathered by the SAME permutation as k/s — each lane keeps its grid-order
+    lane id, so the per-lane uniform stream is sort-invariant.
     """
     L = int(k_lanes.shape[0])
     n_chunks = max(1, -(-L // max(1, chunk)))
@@ -281,7 +409,10 @@ def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int):
         pad = width - len(idx)
         if pad:
             idx = np.concatenate([idx, np.repeat(idx[-1:], pad)])
-        out = _packet_lanes(pw, k_lanes[idx], s_lanes[idx], m_nodes, ring)
+        chaos_c = (None if chaos is None
+                   else jax.tree.map(lambda x: jnp.asarray(x)[idx], chaos))
+        out = _packet_lanes(pw, k_lanes[idx], s_lanes[idx], m_nodes, ring,
+                            chaos_c)
         chunks.append(jax.tree.map(lambda x: np.asarray(x)[:width - pad]
                                    if pad else np.asarray(x), out))
     gathered = jax.tree.map(lambda *x: np.concatenate(x, axis=0), *chunks)
@@ -290,18 +421,26 @@ def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int):
     return jax.tree.map(lambda x: x[inv], gathered)
 
 
-def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring):
+def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
     """All lanes in one dispatch, lane axis padded + sharded when possible."""
     L = int(k_lanes.shape[0])
     pad = lane_padding(L)
     if pad:
         k_lanes = jnp.concatenate([k_lanes, jnp.repeat(k_lanes[-1:], pad)])
         s_lanes = jnp.concatenate([s_lanes, jnp.repeat(s_lanes[-1:], pad)])
+        if chaos is not None:
+            # sentinel lanes replay the last real lane (same lane id ->
+            # same stream); their rows are sliced off below
+            chaos = jax.tree.map(
+                lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad)]),
+                chaos)
     sharding = lane_sharding(L + pad, pad=True)
     if sharding is not None:
         k_lanes = jax.device_put(k_lanes, sharding)
         s_lanes = jax.device_put(s_lanes, sharding)
-    out = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring)
+        if chaos is not None:
+            chaos = jax.device_put(chaos, sharding)
+    out = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring, chaos)
     return jax.tree.map(lambda x: np.asarray(x)[:L], out)
 
 
@@ -310,7 +449,7 @@ def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring):
 # --------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("m_nodes", "ring"))
-def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring):
+def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
     """[W]-stacked workloads x [W, L] lanes: one program, W * L experiments.
 
     The outer vmap batches the PackedWorkload operand itself
@@ -318,10 +457,20 @@ def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring):
     axis. Static aux (n_types, n_jobs) is shared by construction
     (`repro.core.cohort.stack_workloads` validates), so the jit cache keys
     on one shape for the whole cohort.
+
+    `chaos` leaves are [L] and SHARED across the workload axis (common
+    random numbers: every member sees the same per-lane fault stream, so
+    cross-workload comparisons at a grid cell difference out the draws).
     """
-    lanes = jax.vmap(_one_experiment_scan, in_axes=(None, 0, 0, None, None))
-    return jax.vmap(lanes, in_axes=(0, 0, 0, None, None))(
-        spw, k_lanes, s_lanes, m_nodes, ring)
+    if chaos is None:
+        lanes = jax.vmap(_one_experiment_scan,
+                         in_axes=(None, 0, 0, None, None))
+        return jax.vmap(lanes, in_axes=(0, 0, 0, None, None))(
+            spw, k_lanes, s_lanes, m_nodes, ring)
+    lanes = jax.vmap(_one_experiment_scan,
+                     in_axes=(None, 0, 0, None, None, 0))
+    return jax.vmap(lanes, in_axes=(0, 0, 0, None, None, None))(
+        spw, k_lanes, s_lanes, m_nodes, ring, chaos)
 
 
 # NOTE: there is deliberately no while-engine cohort kernel. Vmapping
@@ -354,7 +503,8 @@ def cohort_lane_sharding(n_lanes: int, pad: bool = False):
         mesh, jax.sharding.PartitionSpec(None, "lane"))
 
 
-def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int):
+def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int,
+                       chaos=None):
     """Sorted chunks of every member's lanes, interleaved without syncs.
 
     The measured single-device cohort layout. Workload-fusing each chunk
@@ -392,7 +542,9 @@ def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int):
         pw_w = jax.tree.map(lambda x: x[w], spw)
         chunks = [jax.tree.map(
             lambda x: x[:width - pad] if pad else x,
-            _packet_lanes(pw_w, k_l2[w, idx], s_l2[w, idx], m_nodes, ring))
+            _packet_lanes(pw_w, k_l2[w, idx], s_l2[w, idx], m_nodes, ring,
+                          None if chaos is None else jax.tree.map(
+                              lambda x: jnp.asarray(x)[idx], chaos)))
             for idx, pad in slices]
         rows.append(jax.tree.map(lambda *x: jnp.concatenate(x), *chunks))
     gathered = jax.tree.map(lambda *x: jnp.stack(x), *rows)
@@ -400,7 +552,7 @@ def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int):
     return jax.tree.map(lambda x: x[:, inv], gathered)
 
 
-def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring):
+def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring, chaos=None):
     """All W x L lanes in one dispatch; lane axis padded + sharded."""
     L = int(k_l2.shape[1])
     pad = lane_padding(L)
@@ -409,27 +561,41 @@ def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring):
             [k_l2, jnp.repeat(k_l2[:, -1:], pad, axis=1)], axis=1)
         s_l2 = jnp.concatenate(
             [s_l2, jnp.repeat(s_l2[:, -1:], pad, axis=1)], axis=1)
+        if chaos is not None:
+            chaos = jax.tree.map(
+                lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad)]),
+                chaos)
     sharding = cohort_lane_sharding(L + pad, pad=True)
     if sharding is not None:
         k_l2 = jax.device_put(k_l2, sharding)
         s_l2 = jax.device_put(s_l2, sharding)
-    out = _packet_cohort_lanes(spw, k_l2, s_l2, m_nodes, ring)
+        if chaos is not None:
+            # chaos leaves are [L]: shard with the 1-D lane sharding that
+            # matches the inner (lane) axis of the [W, L] operands
+            chaos = jax.device_put(chaos, lane_sharding(L + pad, pad=True))
+    out = _packet_cohort_lanes(spw, k_l2, s_l2, m_nodes, ring, chaos)
     return jax.tree.map(lambda x: np.asarray(x)[:, :L], out)
 
 
 def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
                     s_props: Sequence[float] = PAPER_INIT_PROPS,
                     mode: str = "auto",
-                    chunk_lanes: int | None = None) -> dict:
+                    chunk_lanes: int | None = None,
+                    chaos: ChaosConfig | None = None,
+                    on_budget_exhausted: str = "raise") -> dict:
     """Per-workload [K, S] Metrics for every member of a `WorkloadCohort`,
     computed as ONE batched study over the stacked workload axis.
 
     Returns ``{name: Metrics}`` with leaves of shape [len(ks), len(s_props)]
-    — each entry identical (lane for lane) to
+    (``[K, S, C]`` when `chaos` carries a C-long fault-parameter axis) —
+    each entry identical (lane for lane) to
     ``run_packet_grid(wl, ks, s_props, dtype=cohort.dtype)``, because the
     cohort kernel batches the same scan engine over an extra workload axis
     and per-lane results are independent of dispatch grouping (the cohort
-    equivalence suite pins this bitwise in both dtypes).
+    equivalence suite pins this bitwise in both dtypes). The chaos lane
+    stream is shared across members (lane ids are assigned per grid cell,
+    not per workload), so cohort and per-workload runs agree exactly and
+    cross-workload comparisons use common random numbers.
 
     Modes are the sweep layouts applied to the [W, L] study: ``"chunked"``
     dispatches sorted [W, width] blocks, ``"fused"`` runs one padded +
@@ -442,6 +608,8 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
     each workload's mean runtime), so the [W, L] init-time operand
     genuinely varies across the workload axis.
     """
+    if chaos_is_inert(chaos):
+        chaos = None        # zero-rate config: run the exact pre-chaos trace
     K, S = len(ks), len(s_props)
     W = cohort.n_workloads
     resolved = resolve_mode(mode, K * S, W)
@@ -451,7 +619,8 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
             f"per workload for the legacy column/row batchings")
     if resolved == "seq":
         return {name: run_packet_grid(wl, ks, s_props, dtype=cohort.dtype,
-                                      mode="seq")
+                                      mode="seq", chaos=chaos,
+                                      on_budget_exhausted=on_budget_exhausted)
                 for name, wl in zip(cohort.names, cohort.workloads)}
 
     dtype = cohort.dtype
@@ -464,16 +633,27 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
             for wl in cohort.workloads])                    # [W, S]
         k_l2 = jnp.broadcast_to(jnp.repeat(ks_arr, S), (W, K * S))
         s_l2 = jnp.tile(s_mat, (1, K))
+        chaos_l, C = (None, 1) if chaos is None else chaos_lane_grid(
+            chaos, K * S, dtype)
+        if C > 1:
+            k_l2 = jnp.repeat(k_l2, C, axis=1)
+            s_l2 = jnp.repeat(s_l2, C, axis=1)
         if resolved == "chunked":
             lanes = _run_cohort_chunks(
                 spw, k_l2, s_l2, m_nodes, ring,
-                max(1, int(chunk_lanes or CHUNK_LANES)))
+                max(1, int(chunk_lanes or CHUNK_LANES)), chaos_l)
         else:                   # fused
-            lanes = _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring)
+            lanes = _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring,
+                                      chaos_l)
+        shape = (W, K, S) if C == 1 else (W, K, S, C)
         grids = jax.tree.map(
-            lambda x: np.asarray(x).reshape((W, K, S) + x.shape[2:]), lanes)
-        return {name: jax.tree.map(lambda x, w=w: x[w], grids)
-                for w, name in enumerate(cohort.names)}
+            lambda x: np.asarray(x).reshape(shape + x.shape[2:]), lanes)
+        out = {name: jax.tree.map(lambda x, w=w: x[w], grids)
+               for w, name in enumerate(cohort.names)}
+        for name, m in out.items():
+            _enforce_budget(m, on_budget_exhausted,
+                            f"run_cohort_grid[{name}]")
+        return out
 
 
 def run_packet_grid(wl: Workload,
@@ -483,10 +663,19 @@ def run_packet_grid(wl: Workload,
                     vmap_s: bool = False,
                     vmap_k: bool = False,
                     mode: str = "auto",
-                    chunk_lanes: int | None = None) -> Metrics:
+                    chunk_lanes: int | None = None,
+                    chaos: ChaosConfig | None = None,
+                    on_budget_exhausted: str = "raise") -> Metrics:
     """Metrics over the (scale ratio x init proportion) grid of one workload.
 
-    Returns a Metrics pytree whose leaves have shape [len(ks), len(s_props)].
+    Returns a Metrics pytree whose leaves have shape [len(ks), len(s_props)],
+    or ``[len(ks), len(s_props), C]`` when `chaos` carries a C-long
+    fault-parameter axis (`chaos_axis_len`) — the chaos axis is a third
+    lane dimension, swept at full batched throughput. Lane ids are assigned
+    in grid order before any dispatch-layout reshuffling, so seq, chunked
+    and fused produce bit-identical chaos draws. `on_budget_exhausted`
+    ("raise" | "warn" | "ignore") governs lanes whose schedules were
+    truncated by the event budget (`Metrics.budget_exhausted`).
 
     Modes (see the module docstring for the layouts): ``"seq"``,
     ``"chunked"``, ``"fused"``, ``"auto"`` (device/lane-count heuristic via
@@ -512,13 +701,18 @@ def run_packet_grid(wl: Workload,
     if (vmap_k or vmap_s) and mode != "auto":
         raise ValueError("pass either mode= or the legacy vmap_k/vmap_s "
                          "flags, not both")
+    if chaos is not None and (vmap_k or vmap_s):
+        raise ValueError("chaos sweeps have no vmap_k/vmap_s layout; use "
+                         "mode='seq'/'chunked'/'fused'")
+    if chaos_is_inert(chaos):
+        chaos = None        # zero-rate config: run the exact pre-chaos trace
     K, S = len(ks), len(s_props)
     if vmap_k:
         mode = "vmap_k"
     elif vmap_s:
         mode = "vmap_s"
     else:
-        mode = resolve_mode(mode, K * S)
+        mode = resolve_mode(mode, K * S * chaos_axis_len(chaos))
 
     with precision.dtype_scope(dtype):
         pw = pack_workload(wl, dtype)
@@ -538,24 +732,43 @@ def run_packet_grid(wl: Workload,
                     for k in ks_arr]
             stacked = jax.tree.map(lambda *x: jnp.stack(x, axis=0), *rows)
             return jax.tree.map(np.asarray, stacked)
+
+        chaos_l, C = (None, 1) if chaos is None else chaos_lane_grid(
+            chaos, K * S, dtype)
+        shape = (K, S) if C == 1 else (K, S, C)
         if mode == "seq":
-            cells = [[_packet_one(pw, k, s, m_nodes, ring) for s in s_vals]
-                     for k in ks_arr]
-            rows = [jax.tree.map(lambda *x: jnp.stack(x), *row)
-                    for row in cells]
-            stacked = jax.tree.map(lambda *x: jnp.stack(x), *rows)
-            return jax.tree.map(np.asarray, stacked)
+            if chaos is None:
+                cells = [_packet_one(pw, k, s, m_nodes, ring)
+                         for k in ks_arr for s in s_vals]
+            else:
+                # the scan engine, one flat lane at a time — same engine
+                # and lane ids as the batched layouts, so chaos draws and
+                # float rounding match the chunked/fused modes exactly
+                cells = [_packet_one(pw, ks_arr[i // (S * C)],
+                                     s_vals[(i // C) % S], m_nodes, ring,
+                                     _chaos_cell(chaos_l, i))
+                         for i in range(K * S * C)]
+            stacked = jax.tree.map(lambda *x: jnp.stack(x), *cells)
+            out = jax.tree.map(
+                lambda x: np.asarray(x).reshape(shape + x.shape[1:]),
+                stacked)
+            _enforce_budget(out, on_budget_exhausted, "run_packet_grid")
+            return out
 
         # batched lane layouts over the scan engine
-        k_lanes = jnp.repeat(ks_arr, S)
-        s_lanes = jnp.tile(s_vals, K)
+        k_lanes = jnp.repeat(ks_arr, S * C)
+        s_lanes = jnp.repeat(jnp.tile(s_vals, K), C)
         if mode == "chunked":
             lanes = _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring,
-                                     max(1, int(chunk_lanes or CHUNK_LANES)))
+                                     max(1, int(chunk_lanes or CHUNK_LANES)),
+                                     chaos_l)
         else:                       # fused
-            lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring)
-        return jax.tree.map(
-            lambda x: np.asarray(x).reshape((K, S) + x.shape[1:]), lanes)
+            lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring,
+                                     chaos_l)
+        out = jax.tree.map(
+            lambda x: np.asarray(x).reshape(shape + x.shape[1:]), lanes)
+        _enforce_budget(out, on_budget_exhausted, "run_packet_grid")
+        return out
 
 
 def run_baselines(wl: Workload, s_props: Sequence[float] = PAPER_INIT_PROPS,

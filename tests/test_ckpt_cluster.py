@@ -1,5 +1,6 @@
 """Checkpointing (atomicity, rotation, elastic re-shard) and ML-cluster
 scheduler (failures, stragglers, work conservation, scale-ratio effect)."""
+import math
 import os
 
 import jax
@@ -143,3 +144,78 @@ def test_slice_granularity():
     assert slice_for(8, 16) == (1, 16)
     sim, m = _run(ClusterConfig(n_chips=64, scale_ratio=1.0))
     assert m["unfinished"] == 0
+
+
+class _FixedRng:
+    """Deterministic rng stub: scripted uniform + exponential streams."""
+
+    def __init__(self, uniforms=(), exponentials=()):
+        self.uniforms = list(uniforms)
+        self.exponentials = list(exponentials)
+        self.exp_scales = []
+
+    def random(self):
+        return self.uniforms.pop(0) if self.uniforms else 1.0
+
+    def exponential(self, scale):
+        self.exp_scales.append(scale)
+        return self.exponentials.pop(0) * scale if self.exponentials \
+            else math.inf
+
+
+def _single_job_sim(cfg, work=6000.0, init_time=100.0):
+    sim = ClusterSim([JobType("t", init_time=init_time, tp_degree=1)], cfg)
+    sim.submit(MLJob(jid=0, jtype=0, submit=0.0, work=work))
+    return sim
+
+
+def test_failure_time_is_group_relative():
+    """Regression: `_maybe_fail` must return t0 + t_fail, the draw offset
+    from the GROUP START (an earlier revision left a dead `dur * 0` term
+    in the sum, which happened to cancel but documented nothing). The
+    failure resolves at group end with the chips held throughout, and the
+    checkpointed prefix of the run decides the loss."""
+    cfg = ClusterConfig(n_chips=4, scale_ratio=2.0, ckpt_period=300.0,
+                        mtbf_chip_hours=1.0)
+    sim = _single_job_sim(cfg)
+    # one group: m = ceil(6000 / (2*100)) = 30 -> clamped to 4 free chips,
+    # dur = 100 + 6000/4 = 1600; script the failure 0.75 of the way into
+    # the exponential scale 1/(4/3600) = 900 -> t_fail = 675 < dur
+    sim.rng = _FixedRng(exponentials=[0.75])
+    m = sim.run()
+    assert sim.rng.exp_scales == [900.0, 900.0]
+    assert m["failures"] == 1 and m["requeues"] == 1
+    # run_done = 675 - 100 = 575; ckpt_done = 300; lost = 275 * 4 chips
+    assert m["lost_chip_seconds"] == pytest.approx(275.0 * 4)
+    # chips stayed held for the full 1600 s, and the remainder group
+    # (6000 - 300*4 = 4800 chip-s) starts only at t=1600
+    assert m["makespan"] == pytest.approx(1600.0 + 100.0 + 4800.0 / 4)
+
+
+def test_failure_past_duration_is_survival():
+    """A draw beyond the group duration means the group completes."""
+    cfg = ClusterConfig(n_chips=4, scale_ratio=2.0, ckpt_period=300.0,
+                        mtbf_chip_hours=1.0)
+    sim = _single_job_sim(cfg)
+    sim.rng = _FixedRng(exponentials=[5.0])   # 4500 s > dur 1600 s
+    m = sim.run()
+    assert m["failures"] == 0 and m["requeues"] == 0
+    assert m["lost_chip_seconds"] == 0.0
+    assert m["makespan"] == pytest.approx(1600.0)
+
+
+def test_requeued_job_reports_last_completion():
+    """Regression: `_finish` must stamp a completing member's finish with
+    THIS group's end (an earlier revision took max() with the stale value,
+    which could never pick anything else). A job that failed, requeued,
+    and completed in a later group reports the later group's end."""
+    cfg = ClusterConfig(n_chips=4, scale_ratio=2.0, ckpt_period=300.0,
+                        mtbf_chip_hours=1.0)
+    sim = _single_job_sim(cfg)
+    sim.rng = _FixedRng(exponentials=[0.75])  # fail group 1 at t=675
+    m = sim.run()
+    assert m["unfinished"] == 0
+    end = 1600.0 + 100.0 + 4800.0 / 4
+    assert sim.jobs[0].finish == pytest.approx(end)
+    assert sim.jobs[0].start == 0.0           # start keeps the FIRST group
+    assert m["makespan"] == pytest.approx(end)
