@@ -151,7 +151,8 @@ def bench_chaos_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
     Both arms run `run_packet_grid(mode="fused")` end to end — the zero
     arm is the exact pre-chaos program (inert configs normalize away),
     the chaos arm carries the per-lane fault stream, the group-log
-    requeue rounds, and the enlarged event budget. Arms are interleaved
+    requeue rounds with per-member credit (the searchsorted remnant
+    walk; see des.py "requeue"), and the enlarged event budget. Arms are interleaved
     within each repeat round like the cohort A/B: the ratio is the
     quantity under test and runner throughput drifts over these
     seconds-scale studies.
@@ -183,6 +184,11 @@ def bench_chaos_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
     n_failures = int(np.sum(np.asarray(res.failures)))
     n_kills = int(np.sum(np.asarray(res.straggler_kills)))
     assert n_failures + n_kills > 0, "chaos arm injected nothing"
+    # member-credit sanity: the walk must actually requeue members at
+    # this fault intensity, and never more than one member set per round
+    n_requeues = int(np.sum(np.asarray(res.requeues)))
+    n_requeued_jobs = int(np.sum(np.asarray(res.requeued_jobs)))
+    assert 0 < n_requeued_jobs <= n_requeues * n_jobs
     zero()
     best = {"zero": np.inf, "chaos": np.inf}
     for _ in range(REPEATS):
@@ -195,7 +201,8 @@ def bench_chaos_ab(n_jobs: int, ks, s_props, nodes=100) -> dict:
         "n_s": len(s_props), "experiments": n_exp,
         "n_devices": jax.device_count(),
         "failures": n_failures, "straggler_kills": n_kills,
-        "requeues": int(np.sum(np.asarray(res.requeues))),
+        "requeues": n_requeues,
+        "requeued_jobs": n_requeued_jobs,
         "zero_ms_per_experiment": best["zero"] / n_exp * 1e3,
         "chaos_ms_per_experiment": best["chaos"] / n_exp * 1e3,
         "chaos_vs_zero_ratio": best["chaos"] / best["zero"],
@@ -339,7 +346,8 @@ def main(argv=None) -> int:
     print(f"[bench_des]   chaos      {chaos_ab['chaos_ms_per_experiment']:8.1f} ms/exp "
           f"({chaos_ab['failures']} failures, "
           f"{chaos_ab['straggler_kills']} kills, "
-          f"{chaos_ab['requeues']} requeues)")
+          f"{chaos_ab['requeues']} requeues, "
+          f"{chaos_ab['requeued_jobs']} members requeued)")
     print(f"[bench_des]   chaos = {chaos_ab['chaos_vs_zero_ratio']:.2f}x "
           f"zero-chaos (bar: {REGRESSION_BAR}x)")
 

@@ -31,9 +31,13 @@ decision and its reason are persisted in the grid provenance either way.
 ``--chaos`` re-runs the study as a fault sweep: every (workload, k, s)
 cell is crossed with a chaos lane axis of MTBF x checkpoint-period x
 straggler-factor cells (`chaos_grid_config`), the grids gain the fault
-metrics (lost_work/failures/straggler_kills/requeues/budget_exhausted)
-with a trailing chaos axis, and results land in
-``paper_chaos_grid.json`` so the zero-chaos study file stays untouched.
+metrics (lost_work / failures / straggler_kills / requeues /
+requeued_jobs / budget_exhausted) with a trailing chaos axis, and
+results land in ``paper_chaos_grid.json`` so the zero-chaos study file
+stays untouched. A ``figure_scale_ratio_vs_faults`` block summarizes
+the study's question — how the avg_wait-optimal scale ratio k* and its
+5% plateau shift with fault rate and checkpoint cadence — per
+(workload, init proportion, chaos cell), ready for figure code.
 Baselines are skipped under chaos — FCFS/backfill carry no fault
 semantics to compare against.
 """
@@ -58,8 +62,13 @@ CHAOS_GRID_PATH = os.path.join(RESULTS_DIR, "paper_chaos_grid.json")
 GRID_FIELDS = ("avg_wait", "med_wait", "avg_qlen", "full_util",
                "useful_util", "avg_run_wait", "n_groups", "ok")
 CHAOS_FIELDS = ("lost_work", "failures", "straggler_kills", "requeues",
-                "budget_exhausted")
+                "requeued_jobs", "budget_exhausted")
 BASELINE_FIELDS = ("avg_wait", "med_wait", "full_util", "useful_util")
+
+# a cell's k belongs to the optimal plateau if its avg_wait is within
+# this relative tolerance of the best k's avg_wait (paper §7 reads the
+# tuning curves as flat-bottomed valleys, not single sharp minima)
+PLATEAU_RTOL = 0.05
 
 # the --chaos study axes: every combination becomes one chaos lane cell
 CHAOS_MTBF_HOURS = (50.0, 200.0)
@@ -83,6 +92,44 @@ def chaos_grid_config(seed: int = 0) -> ChaosConfig:
                        straggler_prob=0.1,
                        straggler_factor=factor.ravel(),
                        straggler_deadline=2.0, seed=seed)
+
+
+def chaos_figure_data(out: dict) -> dict:
+    """The scale-ratio-under-faults figure block, from a chaos-study dict.
+
+    For every (workload, init proportion, chaos cell): the scale ratio
+    minimizing avg_wait (``best_k``), its wait, and the lowest/highest k
+    whose avg_wait stays within `PLATEAU_RTOL` of that minimum — the
+    flat-bottomed tuning valley the paper reads optima from. Lists are
+    indexed ``[init_prop][chaos_cell]``; the chaos-cell parameter axes
+    are echoed so figure code needs no second file. Cells whose schedule
+    was truncated (``ok`` False) are excluded from the minimization.
+    """
+    ks = np.asarray(out["scale_ratios"], np.float64)
+    cells = out["chaos_cells"]
+    fig = {"plateau_rtol": PLATEAU_RTOL,
+           "mtbf_chip_hours": cells["mtbf_chip_hours"],
+           "ckpt_period": cells["ckpt_period"],
+           "straggler_factor": cells["straggler_factor"],
+           "workloads": {}}
+    n_k = len(ks)
+    for name, grids in out["workloads"].items():
+        aw = np.asarray(grids["avg_wait"], np.float64)      # [K, S, C]
+        ok = np.asarray(grids["ok"], bool)
+        aw = np.where(ok, aw, np.inf)
+        best_wait = np.min(aw, axis=0)                      # [S, C]
+        within = np.isfinite(aw) & (aw <= best_wait * (1.0 + PLATEAU_RTOL))
+        k_idx = np.arange(n_k)[:, None, None]
+        lo = np.minimum(np.min(np.where(within, k_idx, n_k), axis=0),
+                        n_k - 1)
+        hi = np.maximum(np.max(np.where(within, k_idx, -1), axis=0), 0)
+        fig["workloads"][name] = {
+            "best_k": ks[np.argmin(aw, axis=0)].tolist(),
+            "best_avg_wait": np.where(np.isfinite(best_wait), best_wait,
+                                      -1.0).tolist(),
+            "plateau_k_lo": ks[lo].tolist(),
+            "plateau_k_hi": ks[hi].tolist()}
+    return fig
 
 
 def workload_dtype(wl, force_dtype=None) -> tuple[np.dtype, str]:
@@ -189,6 +236,8 @@ def run_full_grid(n_jobs: int | None = None, seed: int = 0,
               f"{dt:.1f}s ({dt / (w * n_lanes) * 1e3:.1f} ms/experiment, "
               f"{cohort.dtype.name})", flush=True)
 
+    if chaos is not None:
+        out["figure_scale_ratio_vs_faults"] = chaos_figure_data(out)
     if chaos is None:
         for name, wl in flows.items():
             wl_dtype, _ = decisions[name]
@@ -229,6 +278,9 @@ def main():
                          "instead of the zero-chaos study file")
     ap.add_argument("--chaos-seed", type=int, default=0, metavar="SEED",
                     help="fault-stream seed for --chaos (default 0)")
+    ap.add_argument("--n-jobs", type=int, default=None, metavar="N",
+                    help="jobs per workload (default: the paper's 5000; "
+                         "smaller for smoke/CI runs)")
     args = ap.parse_args()
     dtype = (np.float64 if args.float64
              else np.float32 if args.float32 else None)
@@ -237,11 +289,19 @@ def main():
     out_path = CHAOS_GRID_PATH if args.chaos else GRID_PATH
     os.makedirs(RESULTS_DIR, exist_ok=True)
     t0 = time.time()
-    res = run_full_grid(dtype=dtype, mode=args.mode, workloads=names,
-                        chaos=chaos)
+    res = run_full_grid(n_jobs=args.n_jobs, dtype=dtype, mode=args.mode,
+                        workloads=names, chaos=chaos)
     res["total_seconds"] = time.time() - t0
     with open(out_path, "w") as f:
         json.dump(res, f)
+    if chaos is not None:
+        fig = res["figure_scale_ratio_vs_faults"]
+        for name, d in fig["workloads"].items():
+            b = np.asarray(d["best_k"])
+            print(f"[paper_sweep]   {name}: avg_wait-optimal k spans "
+                  f"{b.min():g}..{b.max():g} across "
+                  f"{len(fig['mtbf_chip_hours'])} fault cells "
+                  f"x {b.shape[0]} init props")
     n = sum(t["experiments"] for t in res["timing"].values())
     n_bl = 2 * len(res["baselines"])
     print(f"[paper_sweep] total: {n} Packet experiments in "

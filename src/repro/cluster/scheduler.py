@@ -95,6 +95,7 @@ class ClusterSim:
         self.useful_cs = 0.0
         self.lost_cs = 0.0               # work lost to failures
         self.requeues = 0
+        self.requeued_jobs = 0           # individual members re-queued
         self.failures = 0
         self.straggler_kills = 0
 
@@ -235,6 +236,7 @@ class ClusterSim:
             remaining -= credit
             if job.work - job.done_work > 1e-9:
                 self.queues[job.jtype].append(job)
+                self.requeued_jobs += 1
             else:
                 job.finish = self.t
 
@@ -258,6 +260,7 @@ class ClusterSim:
             "failures": self.failures,
             "straggler_kills": self.straggler_kills,
             "requeues": self.requeues,
+            "requeued_jobs": self.requeued_jobs,
             "makespan": span,
         }
 

@@ -12,7 +12,8 @@ from repro.core.des import (ChaosConfig, DesResult, PackedWorkload,
                             simulate_packet_reference, simulate_packet_scan)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
-from repro.core.sweep import (PAPER_INIT_PROPS, PAPER_SCALE_RATIOS,
+from repro.core.sweep import (CHAOS_AXIS_FIELDS, PAPER_INIT_PROPS,
+                              PAPER_SCALE_RATIOS,
                               PlateauResult, chaos_axis_len, chaos_lane_grid,
                               cohort_lane_sharding, lane_padding,
                               lane_sharding, plateau_threshold, resolve_mode,
@@ -28,7 +29,8 @@ __all__ = [
     "simulate_packet_host", "simulate_packet_reference",
     "simulate_packet_scan", "Metrics",
     "efficiency_metrics", "simulate_backfill", "simulate_fcfs",
-    "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS", "PlateauResult",
+    "CHAOS_AXIS_FIELDS", "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS",
+    "PlateauResult",
     "chaos_axis_len", "chaos_lane_grid", "cohort_lane_sharding",
     "lane_padding", "lane_sharding", "plateau_threshold", "resolve_mode",
     "run_baselines", "run_cohort_grid", "run_packet_grid", "sweep_plan",

@@ -55,6 +55,9 @@ class CohortKey(NamedTuple):
     # requeue-round bound R (0 without chaos): sizes the group log (N + R)
     # and the event budget, so it is a compile-time static like N. Appended
     # last with a default so pre-chaos positional construction still works.
+    # The per-member requeue credit (des.py "requeue") adds only O(H + ring)
+    # span/residual state — no [N] member arrays and no new capacity — so
+    # R and the ring size remain the only chaos-dependent statics.
     max_requeues: int = 0
 
 

@@ -87,14 +87,40 @@ sweep lane axes (see repro.core.sweep):
     span stretches by `straggler_factor`; if the stretched duration exceeds
     ``straggler_deadline x expected``, the group is killed at the deadline
     and only ``(deadline - s) * m / stretch`` of work is credited;
-  * requeue — the uncredited remainder re-enters the queue as an aggregate
-    per-type POOL (pool_w / pool_cnt / pool_oldest), applied at the finish
-    event: queue weight, oldest-submit and queue length all include the
-    pool, and the next formation of that type drains window + pool
-    together. The pool is an aggregate, so the requeued-job count and
-    oldest-submit are the full member count / group oldest whenever any
-    remainder exists — an upper bound that is exact for single-job groups
-    and zero-credit failures (ClusterSim credits members individually);
+  * requeue — the uncredited remainder re-enters the queue as its TRUE
+    member set. A formed group of type j is always one contiguous rank
+    span [qlo, tail) of that type (window + previously requeued pool), so
+    ClusterSim's per-member credit walk (`_requeue`: credit members in
+    order, requeue whoever keeps > 1e-9 of work) reduces to ONE binary
+    search (`_credit_cut`) over the type's work prefix sums `tj_prefw[j]`:
+    the cut rank is the first member the credit does not finish, the
+    remnant is the rank span [cut, tail) with a done-work RESIDUAL
+    carried for the partially credited head member. To keep the scan
+    step's scatter count flat, formation only STASHES the span identity
+    in the group's ring slot — an int32 code ``1 + qlo*(N+1) + tail``
+    in `grp_rem_cnt` plus the available credit in `grp_rem_w` — and the
+    walk itself is DEFERRED to the finish event (`_resolve_remnant`),
+    which is also when ClusterSim credits members. The per-type POOL
+    keeps exact work/oldest aggregates (pool_w / pool_oldest) plus ONE
+    packed int32 `pool_code` carrying span head, fragmented bit and
+    member count (`_pool_decode`); the partially-credited head member's
+    done-work residual is not stored at all — a non-fragmented pool is
+    one contiguous span, so the next formation recovers it as span work
+    minus pool_w. Memory/budget cost: O(H + ring) extra scalars — three
+    [H] fields and three [ring] fields (scatter parity with the
+    aggregate pool this replaces), never [N] member state, so the scan
+    engine's vmap shape and `event_budget(N, R)` are unchanged (a
+    requeue batch still funds at most one extra formation + finish). Count, oldest-submit and queue weight of a remnant are
+    exact whenever the pool is one rank span credited oldest-first
+    (always, in every differential hand case); if two same-type groups
+    finish with remnants before the next formation, or a remnant
+    returns after newer jobs already drained past it, the pool is marked
+    FRAGMENTED and that one batch falls back to the PR-5 aggregate upper
+    bound (all members requeued, group-oldest; encoded as a NEGATED
+    count in the ring stash) — work stays exact and the flag clears at
+    the type's next formation. Rank order equals ClusterSim's append
+    order except when jobs submitted during the failed group's run are
+    themselves split by the credit;
   * bounded injection — at most `max_requeues` (default N) requeues are
     injected per lane, so group count stays <= N + max_requeues and
     `event_budget(N, max_requeues)` stays analytic. Hitting a genuinely
@@ -138,6 +164,7 @@ from repro.workload.lublin import Workload
 
 INF = jnp.inf
 RING = 512           # static fallback ring size (used when M is traced)
+CREDIT_EPS = 1e-9    # ClusterSim _requeue's "fully credited" threshold
 
 
 def _register_optimization_barrier_batcher() -> None:
@@ -421,16 +448,28 @@ class DesState(NamedTuple):
     iters: jnp.ndarray        # diagnostic: outer loop iterations
     # chaos state (zeros / untouched when chaos is None)
     pool_w: jnp.ndarray       # [H] requeued remainder work per type
-    pool_cnt: jnp.ndarray     # [H] requeued job count per type
     pool_oldest: jnp.ndarray  # [H] oldest submit among requeued jobs (+inf)
+    # packed span identity + count (0 == empty pool):
+    #   (head_rank * 2 + fragmented) * (N + 1) + count        (_pool_decode)
+    # The head member's done-work residual is NOT stored: a non-fragmented
+    # pool is one contiguous span [head_rank, head[j]) merged at a single
+    # finish, so formation recovers it as span work - pool_w.
+    pool_code: jnp.ndarray    # [H] packed (head rank, fragmented, count)
     grp_jtype: jnp.ndarray    # [ring] type of each running group
-    grp_rem_w: jnp.ndarray    # [ring] remainder to requeue at finish
-    grp_rem_cnt: jnp.ndarray  # [ring] jobs in that remainder
-    grp_rem_oldest: jnp.ndarray  # [ring] oldest submit in that remainder
+    # per-slot requeue stash, resolved by the credit walk at finish:
+    #   grp_rem_cnt > 0 — walk path: 1 + qlo * (N+1) + tail span code,
+    #     grp_rem_w = credit available (pool residual + chaos credit)
+    #   grp_rem_cnt < 0 — fragmented-pool fallback: -count,
+    #     grp_rem_w / grp_rem_oldest = the PR-5 aggregate remainder
+    #   grp_rem_cnt == 0 — nothing to requeue
+    grp_rem_w: jnp.ndarray    # [ring] available credit / aggregate work
+    grp_rem_cnt: jnp.ndarray  # [ring] span code / negated count (see above)
+    grp_rem_oldest: jnp.ndarray  # [ring] aggregate oldest (frag path only)
     lost_work: jnp.ndarray    # chip-seconds lost past checkpoints
     failures: jnp.ndarray
     straggler_kills: jnp.ndarray
     requeues: jnp.ndarray     # also the injection gate (vs max_requeues)
+    requeued_jobs: jnp.ndarray  # members re-entering the queue, total
 
 
 class DesResult(NamedTuple):
@@ -446,12 +485,79 @@ class DesResult(NamedTuple):
     lost_work: jnp.ndarray    # chip-seconds lost to failures (not clipped)
     failures: jnp.ndarray
     straggler_kills: jnp.ndarray
-    requeues: jnp.ndarray
+    requeues: jnp.ndarray     # requeue batches (one per failed/killed group)
+    requeued_jobs: jnp.ndarray  # individual members re-entering the queue
 
 
 def _window_overlap(a, b, t_end):
     """Length of [a, b] clipped to the metric window [0, t_end]."""
     return jnp.maximum(jnp.minimum(b, t_end) - jnp.minimum(a, t_end), 0.0)
+
+
+def _credit_cut(tj_prefw, j, lo, hi, target):
+    """Largest rank in [lo, hi] with ``tj_prefw[j, rank] <= target``.
+
+    Equivalent to ``clip(searchsorted(tj_prefw[j], target, 'right') - 1,
+    lo, hi)`` under the caller's invariant ``tj_prefw[j, lo] <= target``
+    (prefix rows are non-decreasing, and target = prefw[lo] + nonneg),
+    but as a fixed-trip branchless binary search: ceil(log2(N + 1))
+    scalar gathers per event instead of materializing the [N + 1] row
+    every scan step — the row gather alone pushed the fused chaos sweep
+    to ~3x a zero-chaos lane, past the 2x CI bar.
+    """
+    steps = max(int(tj_prefw.shape[1] - 1).bit_length(), 1)
+    for _ in range(steps):
+        mid = (lo + hi + 1) >> 1
+        go = tj_prefw[j, mid] <= target
+        lo = jnp.where(go, mid, lo)
+        hi = jnp.where(go, hi, mid - 1)
+    return lo
+
+
+def _resolve_remnant(pw: PackedWorkload, j_f, code, stored_w, stored_old,
+                     dtype):
+    """Resolve a ring slot's requeue stash at group finish.
+
+    Returns ``(cnt, w, oldest, lo, hi, walk)`` — the remnant member set
+    to merge into the type's pool. Walk path (``code > 0``): decode the
+    span, run ClusterSim's in-order credit walk via `_credit_cut`, and
+    derive count / work / oldest from the static work prefix sums, so
+    the scan carries no per-slot member state beyond the (code, credit,
+    oldest) triple. ``w`` excludes the partially-credited head member's
+    residual, which formation recovers from the span aggregates (see
+    `pool_code` in DesState). Frag path (``code < 0``) passes the stored
+    aggregates through; ``code == 0`` resolves to an empty remnant
+    (cnt 0, w 0, oldest +inf — identity under the pool merge).
+    """
+    N = pw.n_jobs
+    zero_f = jnp.zeros((), dtype)
+    eps = jnp.asarray(CREDIT_EPS, dtype)
+    walk = code > 0
+    span = jnp.maximum(code - 1, 0)
+    qlo = (span // (N + 1)).astype(jnp.int32)
+    hi = (span % (N + 1)).astype(jnp.int32)
+    qlo_w = pw.tj_prefw[j_f, qlo]
+    hi_w = pw.tj_prefw[j_f, hi]
+    target = qlo_w + stored_w + eps
+    cut = _credit_cut(pw.tj_prefw, j_f, qlo, hi, target)
+    cut_w = pw.tj_prefw[j_f, cut]
+    m_res = jnp.maximum(stored_w - (cut_w - qlo_w), zero_f)
+    m_w = jnp.maximum(hi_w - cut_w - m_res, zero_f)
+    m_cnt = hi - cut
+    m_old = pw.tj_submit[j_f, jnp.minimum(cut, N - 1)]
+    return (jnp.where(walk, m_cnt, -code),
+            jnp.where(walk, m_w, stored_w),
+            jnp.where(walk & (m_cnt > 0), m_old, stored_old),
+            jnp.where(walk, cut, jnp.zeros((), jnp.int32)),
+            hi,
+            walk)
+
+
+def _pool_decode(code, n_jobs):
+    """(count, head rank, fragmented) from a packed `pool_code` value."""
+    cnt = code % (n_jobs + 1)
+    meta = code // (n_jobs + 1)
+    return cnt, meta >> 1, (meta & 1) == 1
 
 
 def _reconstruct_job_times(pw: PackedWorkload, log_key, log_t, log_m,
@@ -532,7 +638,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         st = carry
         nonempty = st.tail > st.head
         if chaos is not None:
-            nonempty = nonempty | (st.pool_cnt > 0)
+            nonempty = nonempty | (st.pool_code > 0)
         free_slot = jnp.any(jnp.isinf(st.grp_end))
         return (st.m_free > 0) & jnp.any(nonempty) & free_slot
 
@@ -543,7 +649,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
         if chaos is not None:
             # requeued remainder counts toward weight / age / emptiness
-            nonempty = nonempty | (st.pool_cnt > 0)
+            nonempty = nonempty | (st.pool_code > 0)
             sum_w = sum_w + st.pool_w
             oldest = jnp.minimum(oldest, st.pool_oldest)
         w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j, nonempty)
@@ -570,22 +676,46 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
             t_fin = st.t + out.dur
             useful_end = jnp.where(out.failed,
                                    st.t + s_j[j] + out.ckpt_done, t_fin)
-            rem = work - out.credit
-            rem = jnp.where(rem > 1e-9, rem, zero_f)
             requeued = out.failed | out.killed
-            has_rem = requeued & (rem > 0)
-            memb_cnt = (st.tail[j] - st.head[j]) + st.pool_cnt[j]
+            # Stash the requeue for the group's finish event. The drained
+            # queue is the rank span [qlo, tail) of type j with a possible
+            # done-work residual on its head member; the per-member credit
+            # walk (ClusterSim _requeue, oldest first) is DEFERRED to the
+            # finish (_resolve_remnant), so the ring carries only a span
+            # code and the available credit — no extra per-slot arrays.
+            eps = jnp.asarray(CREDIT_EPS, dtype)
+            p_cnt, p_lo, p_frag = _pool_decode(st.pool_code[j], N)
+            has_pool = p_cnt > 0
+            qlo = jnp.where(has_pool, p_lo, st.head[j])
+            # recover the head member's done-work residual from the span
+            # aggregates (non-fragmented pool = one contiguous span
+            # [qlo, head) merged at a single finish)
+            res0 = jnp.where(has_pool, jnp.maximum(
+                head_w - pw.tj_prefw[j, qlo] - st.pool_w[j], zero_f),
+                zero_f)
+            walk_ok = ~(has_pool & p_frag)
+            avail = res0 + out.credit
+            # span code 1 + qlo*(N+1) + tail stays well inside int32 for
+            # the paper's N <= 5000 (bound ~ (N+1)^2)
+            span_code = 1 + qlo * (N + 1) + st.tail[j]
+            # fragmented pool: PR-5 aggregate upper bound for this batch
+            rem_agg = work - out.credit
+            a_has = requeued & (rem_agg > eps)
+            a_cnt = (st.tail[j] - st.head[j]) + p_cnt
+            code = jnp.where(requeued & walk_ok, span_code,
+                             jnp.where(a_has, -a_cnt, zero_i))
+            stash_w = jnp.where(
+                requeued & walk_ok, avail,
+                jnp.where(a_has, jnp.maximum(rem_agg, zero_f), zero_f))
+            stash_old = jnp.where(a_has & ~walk_ok, oldest[j], INF)
             upd = dict(
                 grp_jtype=st.grp_jtype.at[slot].set(j),
-                grp_rem_w=st.grp_rem_w.at[slot].set(
-                    jnp.where(has_rem, rem, zero_f)),
-                grp_rem_cnt=st.grp_rem_cnt.at[slot].set(
-                    jnp.where(has_rem, memb_cnt, zero_i)),
-                grp_rem_oldest=st.grp_rem_oldest.at[slot].set(
-                    jnp.where(has_rem, oldest[j], INF)),
+                grp_rem_w=st.grp_rem_w.at[slot].set(stash_w),
+                grp_rem_cnt=st.grp_rem_cnt.at[slot].set(code),
+                grp_rem_oldest=st.grp_rem_oldest.at[slot].set(stash_old),
                 pool_w=st.pool_w.at[j].set(zero_f),
-                pool_cnt=st.pool_cnt.at[j].set(zero_i),
                 pool_oldest=st.pool_oldest.at[j].set(INF),
+                pool_code=st.pool_code.at[j].set(zero_i),
                 lost_work=st.lost_work + out.lost,
                 failures=st.failures + jnp.where(out.failed, one_i, zero_i),
                 straggler_kills=st.straggler_kills + jnp.where(
@@ -634,7 +764,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         qlen = jnp.sum(st.tail - st.head).astype(st.t.dtype)
         q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
         if chaos is not None:
-            qlen = qlen + jnp.sum(st.pool_cnt).astype(st.t.dtype)
+            qlen = qlen + jnp.sum(st.pool_code % (N + 1)).astype(st.t.dtype)
             q_inc = jax.lax.optimization_barrier(
                 qlen * _window_overlap(st.t, t_new, t_end_metric))
         qint = st.qlen_int + q_inc
@@ -647,17 +777,36 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         def on_finish(st):
             upd = {}
             if chaos is not None:
-                # apply the requeued remainder to the per-type pool NOW —
-                # the queue must not see it before the group's end
+                # resolve the stashed requeue into its member set NOW —
+                # the queue must not see it before the group's end, and
+                # ClusterSim's _requeue credits members at the same time
                 j_f = st.grp_jtype[slot]
+                cnt, rem_w, rem_old, rem_lo, rem_hi, walk = (
+                    _resolve_remnant(pw, j_f, st.grp_rem_cnt[slot],
+                                     st.grp_rem_w[slot],
+                                     st.grp_rem_oldest[slot], dtype))
+                old_cnt, old_lo, old_frag = _pool_decode(
+                    st.pool_code[j_f], N)
+                inc = cnt > 0
+                was_empty = old_cnt == 0
+                # the remnant span abuts the live window only if no
+                # formation of this type ran while the group held it
+                contig = rem_hi == st.head[j_f]
+                frag = jnp.where(
+                    inc, old_frag | ~walk | ~was_empty | ~contig, old_frag)
+                new_lo = jnp.where(was_empty, rem_lo,
+                                   jnp.minimum(old_lo, rem_lo))
+                new_code = ((new_lo * 2 + frag.astype(jnp.int32))
+                            * (N + 1) + old_cnt + cnt)
                 upd = dict(
-                    pool_w=st.pool_w.at[j_f].add(st.grp_rem_w[slot]),
-                    pool_cnt=st.pool_cnt.at[j_f].add(st.grp_rem_cnt[slot]),
-                    pool_oldest=st.pool_oldest.at[j_f].min(
-                        st.grp_rem_oldest[slot]),
+                    pool_w=st.pool_w.at[j_f].add(rem_w),
+                    pool_oldest=st.pool_oldest.at[j_f].min(rem_old),
+                    pool_code=st.pool_code.at[j_f].set(jnp.where(
+                        inc, new_code, st.pool_code[j_f])),
                     grp_rem_w=st.grp_rem_w.at[slot].set(zero_f),
                     grp_rem_cnt=st.grp_rem_cnt.at[slot].set(zero_i),
-                    grp_rem_oldest=st.grp_rem_oldest.at[slot].set(INF))
+                    grp_rem_oldest=st.grp_rem_oldest.at[slot].set(INF),
+                    requeued_jobs=st.requeued_jobs + cnt)
             return st._replace(m_free=st.m_free + st.grp_m[slot],
                                grp_end=st.grp_end.at[slot].set(INF),
                                grp_m=st.grp_m.at[slot].set(0), **upd)
@@ -678,15 +827,17 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
         qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
         useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32),
         iters=jnp.zeros((), jnp.int32),
-        pool_w=jnp.zeros((H,), dtype), pool_cnt=jnp.zeros((H,), jnp.int32),
+        pool_w=jnp.zeros((H,), dtype),
         pool_oldest=jnp.full((H,), INF, dtype),
+        pool_code=jnp.zeros((H,), jnp.int32),
         grp_jtype=jnp.zeros((ring,), jnp.int32),
         grp_rem_w=jnp.zeros((ring,), dtype),
         grp_rem_cnt=jnp.zeros((ring,), jnp.int32),
         grp_rem_oldest=jnp.full((ring,), INF, dtype),
         lost_work=jnp.zeros((), dtype), failures=jnp.zeros((), jnp.int32),
         straggler_kills=jnp.zeros((), jnp.int32),
-        requeues=jnp.zeros((), jnp.int32))
+        requeues=jnp.zeros((), jnp.int32),
+        requeued_jobs=jnp.zeros((), jnp.int32))
 
     st = jax.lax.while_loop(cond, body, st0)
     start_t, run_start_t = _reconstruct_job_times(
@@ -694,7 +845,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
     drained = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
         jnp.all(st.head == st.tail)
     if chaos is not None:
-        drained = drained & jnp.all(st.pool_cnt == 0)
+        drained = drained & jnp.all(st.pool_code == 0)
     ok = drained & jnp.all(jnp.isfinite(start_t))
     return DesResult(start_t=start_t, run_start_t=run_start_t,
                      qlen_int=st.qlen_int, busy_ns=st.busy_ns,
@@ -702,7 +853,7 @@ def simulate_packet(pw: PackedWorkload, k, s_init, m_nodes,
                      makespan=st.t, ok=ok, budget_exhausted=~drained,
                      lost_work=st.lost_work, failures=st.failures,
                      straggler_kills=st.straggler_kills,
-                     requeues=st.requeues)
+                     requeues=st.requeues, requeued_jobs=st.requeued_jobs)
 
 
 # --------------------------------------------------------------------------
@@ -741,16 +892,17 @@ class _ScanState(NamedTuple):
     n_groups: jnp.ndarray
     # chaos state (zeros / untouched when chaos is None)
     pool_w: jnp.ndarray       # [H] requeued remainder work per type
-    pool_cnt: jnp.ndarray     # [H] requeued job count per type
     pool_oldest: jnp.ndarray  # [H] oldest submit among requeued jobs
+    pool_code: jnp.ndarray    # [H] packed span/frag/count (DesState)
     grp_jtype: jnp.ndarray    # [ring]
-    grp_rem_w: jnp.ndarray    # [ring] remainder to requeue at finish
-    grp_rem_cnt: jnp.ndarray  # [ring]
-    grp_rem_oldest: jnp.ndarray  # [ring]
+    grp_rem_w: jnp.ndarray    # [ring] available credit / aggregate work
+    grp_rem_cnt: jnp.ndarray  # [ring] span code / negated count (DesState)
+    grp_rem_oldest: jnp.ndarray  # [ring] aggregate oldest (frag path only)
     lost_work: jnp.ndarray
     failures: jnp.ndarray
     straggler_kills: jnp.ndarray
     requeues: jnp.ndarray
+    requeued_jobs: jnp.ndarray
 
 
 def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
@@ -824,13 +976,13 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         active = ((st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end)) |
                   jnp.any(st.tail > st.head))
         if chaos is not None:
-            active = active | jnp.any(st.pool_cnt > 0)
+            active = active | jnp.any(st.pool_code > 0)
         return active
 
     def step(st: _ScanState, _):
         nonempty = st.tail > st.head
         if chaos is not None:
-            nonempty = nonempty | (st.pool_cnt > 0)
+            nonempty = nonempty | (st.pool_code > 0)
         free_mask = jnp.isinf(st.grp_end)
         queued = jnp.any(nonempty)
         active = lane_active(st)
@@ -864,11 +1016,28 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
             t_gfin = st.t + out.dur
             useful_end = jnp.where(out.failed,
                                    st.t + s_j[j] + out.ckpt_done, t_gfin)
-            rem = work - out.credit
-            rem = jnp.where(rem > 1e-9, rem, zero_f)
             requeued = do_sched & (out.failed | out.killed)
-            has_rem = requeued & (rem > 0)
-            memb_cnt = (st.tail[j] - st.head[j]) + st.pool_cnt[j]
+            # stash the requeue span + credit for the finish event — see
+            # simulate_packet for the deferred-walk notes
+            eps = jnp.asarray(CREDIT_EPS, dtype)
+            p_cnt, p_lo, p_frag = _pool_decode(st.pool_code[j], N)
+            has_pool = p_cnt > 0
+            qlo = jnp.where(has_pool, p_lo, st.head[j])
+            res0 = jnp.where(has_pool, jnp.maximum(
+                head_w - pw.tj_prefw[j, qlo] - st.pool_w[j], zero_f),
+                zero_f)
+            walk_ok = ~(has_pool & p_frag)
+            avail = res0 + out.credit
+            span_code = 1 + qlo * (N + 1) + st.tail[j]
+            rem_agg = work - out.credit
+            a_has = requeued & (rem_agg > eps)
+            a_cnt = (st.tail[j] - st.head[j]) + p_cnt
+            code = jnp.where(requeued & walk_ok, span_code,
+                             jnp.where(a_has, -a_cnt, zero_i))
+            stash_w = jnp.where(
+                requeued & walk_ok, avail,
+                jnp.where(a_has, jnp.maximum(rem_agg, zero_f), zero_f))
+            stash_old = jnp.where(a_has & ~walk_ok, oldest[j], INF)
         busy_inc = m_grp.astype(dtype) * _window_overlap(
             st.t, t_gfin, t_end_metric)
         useful_inc = m_grp.astype(dtype) * _window_overlap(
@@ -887,7 +1056,7 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         t_new = jnp.where(take_sub, t_sub, t_efin)
         qlen = jnp.sum(st.tail - st.head).astype(dtype)
         if chaos is not None:
-            qlen = qlen + jnp.sum(st.pool_cnt).astype(dtype)
+            qlen = qlen + jnp.sum(st.pool_code % (N + 1)).astype(dtype)
         q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
         if chaos is not None:
             q_inc = jax.lax.optimization_barrier(q_inc)
@@ -917,39 +1086,51 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         if chaos is None:
             chaos_upd = {}
         else:
-            # formation clears the drained pool and stashes the remainder
-            # in the ring; the finish event releases it back to the pool
+            # formation clears the drained pool and stashes the requeue in
+            # the ring; the finish event resolves the stash into its member
+            # set (_resolve_remnant) and releases it back to the pool
             j_f = st.grp_jtype[eslot]
+            cnt_r, rem_w_r, rem_old_r, rem_lo_r, rem_hi_r, walk_r = (
+                _resolve_remnant(pw, j_f, st.grp_rem_cnt[eslot],
+                                 st.grp_rem_w[eslot],
+                                 st.grp_rem_oldest[eslot], dtype))
+            old_cnt, old_lo, old_frag = _pool_decode(st.pool_code[j_f], N)
+            inc = do_finish & (cnt_r > 0)
+            was_empty = old_cnt == 0
+            contig = rem_hi_r == st.head[j_f]
+            frag = jnp.where(
+                inc, old_frag | ~walk_r | ~was_empty | ~contig, old_frag)
+            new_lo = jnp.where(was_empty, rem_lo_r,
+                               jnp.minimum(old_lo, rem_lo_r))
+            new_code = ((new_lo * 2 + frag.astype(jnp.int32))
+                        * (N + 1) + old_cnt + cnt_r)
             pool_w = st.pool_w.at[j].set(
                 jnp.where(do_sched, zero_f, st.pool_w[j]))
             pool_w = pool_w.at[j_f].add(
-                jnp.where(do_finish, st.grp_rem_w[eslot], zero_f))
-            pool_cnt = st.pool_cnt.at[j].set(
-                jnp.where(do_sched, zero_i, st.pool_cnt[j]))
-            pool_cnt = pool_cnt.at[j_f].add(
-                jnp.where(do_finish, st.grp_rem_cnt[eslot], zero_i))
+                jnp.where(do_finish, rem_w_r, zero_f))
             pool_oldest = st.pool_oldest.at[j].set(
                 jnp.where(do_sched, INF, st.pool_oldest[j]))
             pool_oldest = pool_oldest.at[j_f].min(
-                jnp.where(do_finish, st.grp_rem_oldest[eslot], INF))
+                jnp.where(do_finish, rem_old_r, INF))
+            pool_code = st.pool_code.at[j].set(
+                jnp.where(do_sched, zero_i, st.pool_code[j]))
+            pool_code = pool_code.at[j_f].set(
+                jnp.where(inc, new_code, pool_code[j_f]))
             grp_rem_w = st.grp_rem_w.at[sslot].set(
-                jnp.where(has_rem, rem, jnp.where(do_sched, zero_f,
-                                                  st.grp_rem_w[sslot])))
+                jnp.where(do_sched, stash_w, st.grp_rem_w[sslot]))
             grp_rem_w = grp_rem_w.at[eslot].set(
                 jnp.where(do_finish, zero_f, grp_rem_w[eslot]))
             grp_rem_cnt = st.grp_rem_cnt.at[sslot].set(
-                jnp.where(has_rem, memb_cnt, jnp.where(do_sched, zero_i,
-                                                       st.grp_rem_cnt[sslot])))
+                jnp.where(do_sched, code, st.grp_rem_cnt[sslot]))
             grp_rem_cnt = grp_rem_cnt.at[eslot].set(
                 jnp.where(do_finish, zero_i, grp_rem_cnt[eslot]))
             grp_rem_oldest = st.grp_rem_oldest.at[sslot].set(
-                jnp.where(has_rem, oldest[j],
-                          jnp.where(do_sched, INF,
-                                    st.grp_rem_oldest[sslot])))
+                jnp.where(do_sched, stash_old, st.grp_rem_oldest[sslot]))
             grp_rem_oldest = grp_rem_oldest.at[eslot].set(
                 jnp.where(do_finish, INF, grp_rem_oldest[eslot]))
             chaos_upd = dict(
-                pool_w=pool_w, pool_cnt=pool_cnt, pool_oldest=pool_oldest,
+                pool_w=pool_w, pool_oldest=pool_oldest,
+                pool_code=pool_code,
                 grp_jtype=st.grp_jtype.at[sslot].set(
                     jnp.where(do_sched, j, st.grp_jtype[sslot])),
                 grp_rem_w=grp_rem_w, grp_rem_cnt=grp_rem_cnt,
@@ -960,7 +1141,9 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
                                                  one_i, zero_i),
                 straggler_kills=st.straggler_kills + jnp.where(
                     do_sched & out.killed & ~out.failed, one_i, zero_i),
-                requeues=st.requeues + jnp.where(requeued, one_i, zero_i))
+                requeues=st.requeues + jnp.where(requeued, one_i, zero_i),
+                requeued_jobs=st.requeued_jobs + jnp.where(
+                    do_finish, cnt_r, zero_i))
 
         st = st._replace(
             t=jnp.where(do_event, t_new, st.t),
@@ -993,15 +1176,17 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         grp_m=jnp.zeros((ring,), jnp.int32),
         qlen_int=jnp.zeros((), dtype), busy_ns=jnp.zeros((), dtype),
         useful_ns=jnp.zeros((), dtype), n_groups=jnp.zeros((), jnp.int32),
-        pool_w=jnp.zeros((H,), dtype), pool_cnt=jnp.zeros((H,), jnp.int32),
+        pool_w=jnp.zeros((H,), dtype),
         pool_oldest=jnp.full((H,), INF, dtype),
+        pool_code=jnp.zeros((H,), jnp.int32),
         grp_jtype=jnp.zeros((ring,), jnp.int32),
         grp_rem_w=jnp.zeros((ring,), dtype),
         grp_rem_cnt=jnp.zeros((ring,), jnp.int32),
         grp_rem_oldest=jnp.full((ring,), INF, dtype),
         lost_work=jnp.zeros((), dtype), failures=jnp.zeros((), jnp.int32),
         straggler_kills=jnp.zeros((), jnp.int32),
-        requeues=jnp.zeros((), jnp.int32))
+        requeues=jnp.zeros((), jnp.int32),
+        requeued_jobs=jnp.zeros((), jnp.int32))
     logs0 = (jnp.full((budget,), key_pad, jnp.int32),
              jnp.zeros((budget,), dtype),
              jnp.zeros((budget,), jnp.int32),
@@ -1015,7 +1200,7 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
     drained = (st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) & \
         jnp.all(st.head == st.tail)
     if chaos is not None:
-        drained = drained & jnp.all(st.pool_cnt == 0)
+        drained = drained & jnp.all(st.pool_code == 0)
     ok = drained & jnp.all(jnp.isfinite(start_t))
     return DesResult(start_t=start_t, run_start_t=run_start_t,
                      qlen_int=st.qlen_int, busy_ns=st.busy_ns,
@@ -1023,7 +1208,7 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
                      makespan=st.t, ok=ok, budget_exhausted=~drained,
                      lost_work=st.lost_work, failures=st.failures,
                      straggler_kills=st.straggler_kills,
-                     requeues=st.requeues)
+                     requeues=st.requeues, requeued_jobs=st.requeued_jobs)
 
 
 # --------------------------------------------------------------------------
@@ -1158,7 +1343,7 @@ def simulate_packet_reference(pw: PackedWorkload, k, s_init, m_nodes,
                      useful_ns=st.useful_ns, n_groups=st.n_groups,
                      makespan=st.t, ok=ok, budget_exhausted=~drained,
                      lost_work=zf, failures=zi, straggler_kills=zi,
-                     requeues=zi)
+                     requeues=zi, requeued_jobs=zi)
 
 
 @partial(jax.jit, static_argnames=("max_iters", "ring"))

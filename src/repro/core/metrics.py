@@ -49,6 +49,8 @@ class Metrics(NamedTuple):
     failures: jnp.ndarray          # failed groups
     straggler_kills: jnp.ndarray   # deadline kills (failure wins ties)
     requeues: jnp.ndarray          # requeue rounds (failed or killed)
+    requeued_jobs: jnp.ndarray     # individual members requeued (exact
+                                   # per-member credit; see des.py "requeue")
     budget_exhausted: jnp.ndarray  # event/iteration budget hit: truncated
 
 
@@ -78,4 +80,5 @@ def efficiency_metrics(submit, result, m_nodes, t_last_submit) -> Metrics:
         failures=result.failures,
         straggler_kills=result.straggler_kills,
         requeues=result.requeues,
+        requeued_jobs=result.requeued_jobs,
         budget_exhausted=result.budget_exhausted)

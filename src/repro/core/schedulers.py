@@ -119,7 +119,7 @@ def _event_skeleton(pw: PackedWorkload, s_init, m_nodes, sched_pass,
                      useful_ns=st.useful_ns, n_groups=st.n_started,
                      makespan=st.t, ok=ok, budget_exhausted=~drained,
                      lost_work=zf, failures=zi, straggler_kills=zi,
-                     requeues=zi)
+                     requeues=zi, requeued_jobs=zi)
 
 
 def simulate_fcfs(pw: PackedWorkload, s_init, m_nodes,

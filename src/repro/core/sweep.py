@@ -185,20 +185,40 @@ def _baseline_lanes(pw, s_vals, m_nodes, ring):
             "backfill": jax.vmap(bf_one)(s_vals)}
 
 
+#: the ChaosConfig fields that may carry a chaos lane axis
+CHAOS_AXIS_FIELDS = ("mtbf_chip_hours", "ckpt_period", "straggler_prob",
+                     "straggler_factor", "straggler_deadline")
+
+
 def chaos_axis_len(chaos: ChaosConfig | None) -> int:
     """Length C of the chaos lane axis: 1 for a scalar ChaosConfig, else the
-    shared leading dim of its array-valued fault parameters."""
+    shared leading dim of its array-valued fault parameters.
+
+    Scalar/array mixes are legal (scalars broadcast over the axis), but
+    every array-valued parameter must share ONE length and be 1-D; both
+    violations raise here, naming the offending fields, instead of
+    surfacing as a broadcast shape error deep inside `chaos_lane_grid`."""
     if chaos is None:
         return 1
-    sizes = {int(np.ndim(x) and np.shape(x)[0] or 1)
-             for x in (chaos.mtbf_chip_hours, chaos.ckpt_period,
-                       chaos.straggler_prob, chaos.straggler_factor,
-                       chaos.straggler_deadline)}
-    sizes.discard(1)
-    if len(sizes) > 1:
-        raise ValueError(f"ChaosConfig fault parameters have mismatched "
-                         f"chaos-axis lengths: {sorted(sizes)}")
-    return sizes.pop() if sizes else 1
+    sizes: dict[str, int] = {}
+    for name in CHAOS_AXIS_FIELDS:
+        x = getattr(chaos, name)
+        nd = np.ndim(x)
+        if nd > 1:
+            raise ValueError(
+                f"ChaosConfig.{name} must be a scalar or a 1-D chaos axis, "
+                f"got shape {np.shape(x)}")
+        if nd:
+            sizes[name] = int(np.shape(x)[0])
+    arrays = {n: s for n, s in sizes.items() if s != 1}
+    uniq = sorted(set(arrays.values()))
+    if len(uniq) > 1:
+        detail = ", ".join(f"{n}[{s}]" for n, s in sorted(arrays.items()))
+        raise ValueError(
+            f"ChaosConfig fault parameters have mismatched chaos-axis "
+            f"lengths: {detail}; array-valued parameters must share one "
+            f"leading length (scalars broadcast)")
+    return uniq[0] if uniq else 1
 
 
 def chaos_lane_grid(chaos: ChaosConfig, n_grid: int, dtype) -> tuple:
@@ -233,23 +253,58 @@ def _chaos_cell(chaos_lanes: ChaosConfig, i: int) -> ChaosConfig:
     return jax.tree.map(lambda x: x[i], chaos_lanes)
 
 
-def _enforce_budget(metrics, policy: str, label: str):
+_BUDGET_CELLS_SHOWN = 8    # exhausted cells named per message
+
+
+def _format_budget_cells(bad: np.ndarray, ks=None, s_props=None) -> str:
+    """Name the exhausted grid cells: indices along the metric axes
+    ((i_k, i_s[, i_chaos]) for a reshaped grid, a flat lane index
+    otherwise) plus the actual k / s_prop values when the caller's axes
+    are known. Truncated after `_BUDGET_CELLS_SHOWN` entries."""
+    if bad.ndim == 0:
+        return "the single experiment"
+    idx = np.argwhere(bad)
+    names = (("i_k", "i_s", "i_chaos")[:bad.ndim] if bad.ndim <= 3
+             else tuple(f"i{d}" for d in range(bad.ndim)))
+    shown = []
+    for cell in idx[:_BUDGET_CELLS_SHOWN]:
+        cell = tuple(int(v) for v in cell)
+        parts = ([f"lane={cell[0]}"] if bad.ndim == 1 else
+                 [f"{n}={v}" for n, v in zip(names, cell)])
+        if bad.ndim >= 2:
+            if ks is not None and cell[0] < len(ks):
+                parts.append(f"k={float(ks[cell[0]]):g}")
+            if s_props is not None and cell[1] < len(s_props):
+                parts.append(f"s_prop={float(s_props[cell[1]]):g}")
+        shown.append("(" + ", ".join(parts) + ")")
+    more = len(idx) - len(shown)
+    return "; ".join(shown) + (f"; ... {more} more" if more > 0 else "")
+
+
+def _enforce_budget(metrics, policy: str, label: str,
+                    ks=None, s_props=None):
     """raise / warn / ignore when any lane hit its event budget.
 
     A truncated lane means its schedule (and every metric) stops early —
     silently mixing those cells into a grid is how the pre-PR-6 driver hid
-    starved runs, so the default is to raise.
+    starved runs, so the default is to raise. The message names the
+    exhausted cells (grid indices and, when the caller passes its axes,
+    the (k, s_prop) values — the chaos index identifies the fault cell via
+    the sweep plan's `chaos` block), so a truncated 1332-cell run is
+    diagnosable without re-running it.
     """
     if policy not in ("raise", "warn", "ignore"):
         raise ValueError(f"on_budget_exhausted must be 'raise', 'warn' or "
                          f"'ignore', got {policy!r}")
     if policy == "ignore":
         return
-    n_bad = int(np.asarray(metrics.budget_exhausted).sum())
+    bad = np.asarray(metrics.budget_exhausted)
+    n_bad = int(bad.sum())
     if n_bad:
-        msg = (f"{label}: {n_bad} lane(s) exhausted the event budget — "
-               f"schedules are truncated; raise max_requeues/budget or "
-               f"pass on_budget_exhausted='ignore' to keep them")
+        msg = (f"{label}: {n_bad} lane(s) exhausted the event budget at "
+               f"[{_format_budget_cells(bad, ks, s_props)}] — schedules "
+               f"are truncated; raise max_requeues/budget or pass "
+               f"on_budget_exhausted='ignore' to keep them")
         if policy == "raise":
             raise RuntimeError(msg)
         warnings.warn(msg, RuntimeWarning, stacklevel=3)
@@ -366,6 +421,9 @@ def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1,
     if chaos is not None:
         plan["chaos"] = {
             "axis_len": C,
+            # requeue-credit semantics marker: absent in pre-PR-7 plans
+            # (aggregate pool), "per-member" since the member-span walk
+            "requeue_credit": "per-member",
             "seed": int(chaos.seed),
             "max_requeues": (None if chaos.max_requeues is None
                              else int(chaos.max_requeues)),
@@ -652,7 +710,7 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
                for w, name in enumerate(cohort.names)}
         for name, m in out.items():
             _enforce_budget(m, on_budget_exhausted,
-                            f"run_cohort_grid[{name}]")
+                            f"run_cohort_grid[{name}]", ks, s_props)
         return out
 
 
@@ -752,7 +810,8 @@ def run_packet_grid(wl: Workload,
             out = jax.tree.map(
                 lambda x: np.asarray(x).reshape(shape + x.shape[1:]),
                 stacked)
-            _enforce_budget(out, on_budget_exhausted, "run_packet_grid")
+            _enforce_budget(out, on_budget_exhausted, "run_packet_grid",
+                            ks, s_props)
             return out
 
         # batched lane layouts over the scan engine
@@ -767,7 +826,8 @@ def run_packet_grid(wl: Workload,
                                      chaos_l)
         out = jax.tree.map(
             lambda x: np.asarray(x).reshape(shape + x.shape[1:]), lanes)
-        _enforce_budget(out, on_budget_exhausted, "run_packet_grid")
+        _enforce_budget(out, on_budget_exhausted, "run_packet_grid",
+                        ks, s_props)
         return out
 
 

@@ -22,13 +22,15 @@ Four contracts, in order of strictness:
    rng is scripted to replay the DES lane's uniform stream.
 """
 import math
+import types
 import warnings
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ChaosConfig, chaos_axis_len, chaos_is_inert,
+from repro.core import (CHAOS_AXIS_FIELDS, ChaosConfig, chaos_axis_len,
+                        chaos_is_inert, chaos_lane_grid,
                         chaos_uniforms, cohort_key, efficiency_metrics,
                         group_workloads, pack_workload, precision,
                         resolve_max_requeues, resolve_ring, run_cohort_grid,
@@ -117,7 +119,8 @@ class TestEngineChaosParity:
     # dtype; float metric accumulates only up to FMA-contraction ulps
     # (see the module docstring)
     EXACT = ("start_t", "run_start_t", "n_groups", "makespan", "ok",
-             "budget_exhausted", "failures", "straggler_kills", "requeues")
+             "budget_exhausted", "failures", "straggler_kills", "requeues",
+             "requeued_jobs")
 
     @pytest.mark.parametrize("lane", [0, 2, 7])
     @pytest.mark.parametrize("dtype,rtol", [(np.float32, 1e-5),
@@ -198,6 +201,46 @@ class TestSweepChaosParity:
         assert "chaos" not in sweep_plan("auto", 6, chaos=ChaosConfig())
 
 
+# ---------------------------------------------- chaos-axis error reporting
+
+class TestChaosAxisValidation:
+    def test_mismatched_lengths_name_fields(self):
+        bad = ChaosConfig(mtbf_chip_hours=np.asarray([0.1, 0.2]),
+                          straggler_prob=np.asarray([0.1, 0.2, 0.3]))
+        with pytest.raises(ValueError) as ei:
+            chaos_axis_len(bad)
+        msg = str(ei.value)
+        assert "mtbf_chip_hours[2]" in msg
+        assert "straggler_prob[3]" in msg
+
+    def test_2d_param_names_field(self):
+        with pytest.raises(ValueError,
+                           match=r"ckpt_period must be a scalar or a 1-D"):
+            chaos_axis_len(ChaosConfig(mtbf_chip_hours=0.1,
+                                       ckpt_period=np.ones((2, 2))))
+
+    def test_scalar_array_mix_broadcasts(self):
+        mix = ChaosConfig(mtbf_chip_hours=np.asarray([0.1, 0.2]),
+                          ckpt_period=120.0,
+                          straggler_prob=np.asarray([0.3]))
+        assert chaos_axis_len(mix) == 2      # len-1 arrays broadcast too
+        lanes, C = chaos_lane_grid(mix, 3, np.float32)
+        assert C == 2
+        for name in CHAOS_AXIS_FIELDS:
+            assert np.shape(getattr(lanes, name)) == (6,), name
+        np.testing.assert_allclose(np.asarray(lanes.mtbf_chip_hours),
+                                   [0.1, 0.2] * 3, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(lanes.straggler_prob),
+                                   [0.3] * 6, rtol=1e-6)
+        assert np.array_equal(np.asarray(lanes.lane), np.arange(6))
+
+    def test_lane_grid_propagates_named_error(self):
+        bad = ChaosConfig(mtbf_chip_hours=np.asarray([0.1, 0.2]),
+                          straggler_deadline=np.asarray([2.0, 2.0, 2.0]))
+        with pytest.raises(ValueError, match=r"straggler_deadline\[3\]"):
+            chaos_lane_grid(bad, 4, np.float32)
+
+
 # -------------------------------------------------- ClusterSim differential
 
 class ScriptedRng:
@@ -227,6 +270,31 @@ class ScriptedRng:
         v = -math.log(max(float(self.u[self.n_exp, 1]), 5e-324)) * scale
         self.n_exp += 1
         return v
+
+
+def _hand_des(chaos, submit, runtime, k, s=100.0, m=4):
+    """Run both engines on a single-type hand workload (nodes=1 jobs, so
+    work == runtime) and return (while_result, scan_result, uniforms)."""
+    n = len(submit)
+    with precision.dtype_scope(np.float64):
+        wl = make_workload(submit, runtime, [1] * n, [0] * n, 1, m)
+        pw = pack_workload(wl, np.float64)
+        ring = resolve_ring(m, n)
+        cap = n + resolve_max_requeues(chaos, n)
+        u = np.asarray(chaos_uniforms(chaos, np.float64, cap))
+        rw = simulate_packet(pw, jnp.float64(k), jnp.float64(s), m,
+                             ring=ring, chaos=chaos)
+        rs = simulate_packet_scan(pw, jnp.float64(k), jnp.float64(s), m,
+                                  ring=ring, chaos=chaos)
+    return rw, rs, u
+
+
+def _hand_cluster(cfg, submit, runtime, u, s=100.0):
+    sim = ClusterSim([JobType("t0", init_time=s, tp_degree=1)], cfg)
+    sim.rng = ScriptedRng(u)
+    for i, (t, w) in enumerate(zip(submit, runtime)):
+        sim.submit(MLJob(jid=i, jtype=0, submit=float(t), work=float(w)))
+    return sim, sim.run()
 
 
 def _two_job_des(chaos, k, s=100.0, m=4):
@@ -330,6 +398,86 @@ class TestClusterSimDifferential:
         assert cm["unfinished"] == 0
         assert cm["makespan"] == 12700.0
 
+    def test_partial_credit_splits_inside_member(self):
+        """Group 2 = {B(4000), C(6000)} fails with checkpoint credit 6000
+        chip-s: B completes inside the credit, C requeues alone with a
+        2000 chip-s residual. The remnant must be ONE member (oldest
+        submit 2.0) — the pre-fix aggregate pool re-queued the whole
+        member count (2) because it never knew where the credit landed.
+
+        Hand model (s=100, M=4, k=0.25, mtbf=1 chip-hour, ckpt=300;
+        seed 6 picked so groups 1 and 3 survive while group 2 fails at
+        t_fail in [1600, 1900) => ckpt_done 1500, credit 4*1500=6000):
+          A: submit 0, work 6000 -> group 1 [0, 1600), all 4 chips
+          B, C: submit 1, 2 -> queue; group 2 at t=1600, work 10000,
+             dur 2600, fails; credit 6000 = B's 4000 + 2000 into C
+          group 3 at t=4200: {C}, work 4000, dur 1100 -> makespan 5300.
+        """
+        chaos = ChaosConfig(mtbf_chip_hours=1.0, ckpt_period=300.0,
+                            seed=6, lane=0)
+        submit = [0.0, 1.0, 2.0]
+        runtime = [6000.0, 4000.0, 6000.0]
+        rw, rs, u = _hand_des(chaos, submit, runtime, k=0.25)
+        t_fails = [-math.log(max(u[g, 1], 5e-324)) * 900.0 for g in range(3)]
+        assert t_fails[0] > 1600.0 and t_fails[2] > 1100.0
+        assert 1600.0 <= t_fails[1] < 1900.0     # => ckpt_done == 1500
+        lost = (t_fails[1] - 100.0 - 1500.0) * 4
+
+        for eng, r in (("while", rw), ("scan", rs)):
+            assert bool(r.ok), eng
+            assert int(r.n_groups) == 3, eng
+            assert int(r.failures) == 1 and int(r.requeues) == 1, eng
+            # the fix under test: one member requeued, not the pool's 2
+            assert int(r.requeued_jobs) == 1, eng
+            assert float(r.lost_work) == pytest.approx(lost, rel=1e-12), eng
+            assert float(r.makespan) == 5300.0, eng
+            np.testing.assert_allclose(np.asarray(r.start_t),
+                                       [0.0, 1600.0, 1600.0], err_msg=eng)
+
+        cfg = ClusterConfig(n_chips=4, scale_ratio=0.25, ckpt_period=300.0,
+                            mtbf_chip_hours=1.0)
+        sim, cm = _hand_cluster(cfg, submit, runtime, u)
+        assert cm["groups"] == 3 and cm["failures"] == 1
+        assert cm["requeues"] == 1 and cm["requeued_jobs"] == 1
+        assert cm["unfinished"] == 0
+        assert cm["lost_chip_seconds"] == pytest.approx(lost, rel=1e-12)
+        assert cm["makespan"] == 5300.0
+        # B finished by the requeue credit at group 2's end; C ran again
+        assert sim.jobs[1].finish == 4200.0
+        assert sim.jobs[2].finish == 5300.0
+
+    def test_residual_carry_across_requeues(self):
+        """One job killed four times: each walk must start from the
+        pool's carried residual, or the remnant work (and every later
+        duration) is wrong — dropping res0 gives a remnant of 4450
+        instead of 1350 in round 2 alone.
+
+        Hand model (s=100, M=4, k=0.25, prob=1, factor=4, deadline=2),
+        all dyadic: deadline-kill credits 3100, 1550, 775, 387.5
+        accumulate on the single member; remainders 2900 -> 1350 -> 575
+        -> 187.5; round 5 fits its deadline (287.5 <= 293.75). Ends at
+        3200 + 1650 + 875 + 487.5 + 287.5 = 6500 exactly.
+        """
+        chaos = ChaosConfig(straggler_prob=1.0, straggler_factor=4.0,
+                            straggler_deadline=2.0, seed=0, lane=0,
+                            max_requeues=8)
+        submit, runtime = [0.0], [6000.0]
+        rw, rs, u = _hand_des(chaos, submit, runtime, k=0.25)
+        for eng, r in (("while", rw), ("scan", rs)):
+            assert bool(r.ok), eng
+            assert int(r.n_groups) == 5, eng
+            assert int(r.straggler_kills) == 4 and int(r.requeues) == 4, eng
+            assert int(r.requeued_jobs) == 4, eng
+            assert float(r.lost_work) == 0.0, eng
+            assert float(r.makespan) == 6500.0, eng
+
+        cfg = ClusterConfig(n_chips=4, scale_ratio=0.25, straggler_prob=1.0,
+                            straggler_factor=4.0, straggler_deadline=2.0)
+        sim, cm = _hand_cluster(cfg, submit, runtime, u)
+        assert cm["groups"] == 5 and cm["straggler_kills"] == 4
+        assert cm["requeues"] == 4 and cm["requeued_jobs"] == 4
+        assert cm["unfinished"] == 0 and cm["makespan"] == 6500.0
+
 
 # ----------------------------------------------------- budget exhaustion
 
@@ -367,6 +515,37 @@ class TestBudgetExhaustion:
             _enforce_budget(met, "ignore", "test")
         with pytest.raises(ValueError):
             _enforce_budget(met, "explode", "test")
+
+    def test_enforce_budget_names_grid_cells(self):
+        bad = np.zeros((3, 2), bool)
+        bad[0, 1] = bad[2, 0] = True
+        met = types.SimpleNamespace(budget_exhausted=bad)
+        with pytest.raises(RuntimeError) as ei:
+            _enforce_budget(met, "raise", "grid", ks=KS, s_props=SP)
+        msg = str(ei.value)
+        assert "2 lane(s)" in msg
+        assert "(i_k=0, i_s=1, k=0.5, s_prop=0.2)" in msg
+        assert "(i_k=2, i_s=0, k=20, s_prop=0.05)" in msg
+
+    def test_enforce_budget_names_chaos_cells(self):
+        bad = np.zeros((2, 2, 3), bool)
+        bad[1, 0, 2] = True
+        met = types.SimpleNamespace(budget_exhausted=bad)
+        with pytest.raises(RuntimeError, match=r"i_k=1, i_s=0, i_chaos=2"):
+            _enforce_budget(met, "raise", "grid")
+
+    def test_enforce_budget_truncates_flat_lanes(self):
+        met = types.SimpleNamespace(budget_exhausted=np.ones(12, bool))
+        with pytest.raises(RuntimeError) as ei:
+            _enforce_budget(met, "raise", "flat")
+        msg = str(ei.value)
+        assert "lane=0" in msg and "lane=7" in msg
+        assert "lane=8" not in msg and "... 4 more" in msg
+
+    def test_enforce_budget_scalar_experiment(self, chaos_workload):
+        met = self._truncated_metrics(chaos_workload)
+        with pytest.raises(RuntimeError, match="the single experiment"):
+            _enforce_budget(met, "raise", "one-shot")
 
     def test_grid_budget_clean_under_chaos(self, chaos_workload):
         """The sized budget (3N + 2R + slack) drains every chaos lane: the
