@@ -7,6 +7,11 @@ workloads); otherwise runs a reduced grid inline (1200 jobs) so
 emits the data behind the corresponding paper figure and asserts the
 paper's qualitative claim, printing PASS/FAIL — this is the §Paper-repro
 validation harness.
+
+Optional artifacts (the fault study ``paper_chaos_grid.json`` and the
+streaming-controller study ``BENCH_controller.json``) get their figures
+rendered when present and are SKIPPED with a regeneration hint when
+absent — a fresh clone always completes the harness.
 """
 from __future__ import annotations
 
@@ -23,6 +28,8 @@ from repro.workload.lublin import WorkloadParams, generate_workload
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 GRID_PATH = os.path.join(RESULTS, "paper_grid.json")
+CHAOS_GRID_PATH = os.path.join(RESULTS, "paper_chaos_grid.json")
+CONTROLLER_PATH = os.path.join(RESULTS, "BENCH_controller.json")
 KS = np.asarray(PAPER_SCALE_RATIOS)
 SP = list(PAPER_INIT_PROPS)
 
@@ -68,6 +75,23 @@ def _load_grid(n_jobs=1200):
             print(f"[run] simulated {name}: "
                   f"{data['timing'][name]['seconds']:.1f}s")
     return data
+
+
+def _load_optional(path: str, regenerate_hint: str):
+    """An optional results artifact: load it, or skip its figures.
+
+    The zero-chaos grid has an inline reduced-scale fallback (`_load_grid`);
+    the artifacts loaded here (the fault study, the controller study) are
+    multi-minute-to-multi-hour runs with no sensible inline substitute, so
+    a fresh clone just skips their figures instead of hard-failing the
+    whole harness.
+    """
+    if not os.path.exists(path):
+        print(f"[run] SKIP optional artifact {os.path.basename(path)} "
+              f"(regenerate with: {regenerate_hint})")
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def _w(data, name, field):
@@ -259,6 +283,98 @@ def grouping_vs_backfill(data):
     return {"packet": float(uu), "backfill": float(bl)}
 
 
+# -------------------------------------------------- optional-artifact figs
+
+def fig_scale_ratio_vs_faults(chaos):
+    """Chaos study (ROADMAP follow-through): how the avg_wait-optimal k and
+    its 5% plateau move with MTBF / checkpoint cadence / straggler factor.
+
+    Writeup of the committed 5000-job study (regen: paper_sweep.py --chaos):
+    faults move the *cost of the valley floor*, not the tuning
+    recommendation. Halving-MTBF-to-50h roughly triples the best
+    achievable wait on heterogeneous flows (e.g. hetero0.85: ~214s vs
+    ~67s at 200h) because lost work and requeues queue behind everything
+    else — but the optimal k itself stays deep in the high-k plateau for
+    every fault cell, and the 5% plateaus of all 8 cells overlap for at
+    least one init proportion per workload. Operationally: pick k from
+    the zero-chaos sweep and keep it; provision for faults via capacity,
+    not retuning. (The checks below assert exactly that geometry, loosely
+    enough to hold for a smoke-scale regeneration.)
+    """
+    fig = chaos.get("figure_scale_ratio_vs_faults")
+    if not fig:
+        check("chaos-fig: figure block present", False,
+              "paper_chaos_grid.json has no figure_scale_ratio_vs_faults")
+        return {}
+    mtbf = np.asarray(fig["mtbf_chip_hours"])    # [C] cell axes
+    ckpt = np.asarray(fig["ckpt_period"])
+    out = {"mtbf_chip_hours": mtbf.tolist(), "ckpt_period": ckpt.tolist(),
+           "straggler_factor": fig["straggler_factor"],
+           "plateau_rtol": fig["plateau_rtol"], "workloads": {}}
+    lo_mtbf, hi_mtbf = mtbf == mtbf.min(), mtbf == mtbf.max()
+    ordered, corner, costlier, robust = True, True, True, True
+    for name, w in fig["workloads"].items():
+        best_k = np.asarray(w["best_k"])         # [init_prop, cell]
+        best_w = np.asarray(w["best_avg_wait"])
+        k_lo = np.asarray(w["plateau_k_lo"])
+        k_hi = np.asarray(w["plateau_k_hi"])
+        ordered &= bool(np.all((k_lo <= best_k) & (best_k <= k_hi)))
+        corner &= bool(best_k.min() >= 4.0)
+        costlier &= bool(best_w[:, lo_mtbf].mean()
+                         >= 0.95 * best_w[:, hi_mtbf].mean())
+        # the tuning recommendation survives every fault cell: some init
+        # proportion has one k inside all 8 cells' 5% plateaus
+        common = (k_lo.max(axis=1) <= k_hi.min(axis=1))
+        robust &= bool(common.any())
+        out["workloads"][name] = {
+            "best_k": best_k.tolist(), "best_avg_wait": best_w.tolist(),
+            "plateau_k_lo": k_lo.tolist(), "plateau_k_hi": k_hi.tolist(),
+            "wait_ratio_mtbf_lo_over_hi": float(
+                best_w[:, lo_mtbf].mean() / max(best_w[:, hi_mtbf].mean(),
+                                                1e-9)),
+            "common_plateau_props": [float(p) for p, c in
+                                     zip(chaos["init_props"], common) if c],
+        }
+    check("chaos-fig: plateau brackets the optimum (lo <= k* <= hi)",
+          ordered)
+    check("chaos-fig: k* never driven into the low-k corner by faults",
+          corner, f"min k* = "
+          f"{min(np.asarray(w['best_k']).min() for w in fig['workloads'].values()):g}")
+    check("chaos-fig: shorter MTBF raises the valley-floor wait", costlier,
+          " ".join(f"{n}:{v['wait_ratio_mtbf_lo_over_hi']:.2f}x"
+                   for n, v in out["workloads"].items()))
+    check("chaos-fig: a common 5% plateau spans all fault cells "
+          "(some init prop, every workload)", robust)
+    return out
+
+
+def fig_controller_regret(ctl):
+    """Streaming-service study: controller regret vs. hindsight oracles
+    per drift scenario (regen: benchmarks/controller_sweep.py)."""
+    scen = ctl.get("scenarios", {})
+    if not scen:
+        check("controller-fig: scenarios present", False,
+              "BENCH_controller.json has no scenarios")
+        return {}
+    out = {name: {c: {k: s["controllers"][c][k] for k in
+                      ("switches", "rel_regret_wait", "mean_regret_useful",
+                       "mean_wait_vs_plateau")}
+                  for c in s["controllers"]} for name, s in scen.items()}
+    nonneg = all(s["controllers"][c]["mean_regret_wait"] >= -1e-9
+                 for s in scen.values() for c in s["controllers"])
+    check("controller-fig: regret vs per-tick optimum is >= 0", nonneg)
+    hyst = sum(s["controllers"]["hysteresis"]["switches"]
+               for s in scen.values())
+    naive = sum(s["controllers"]["naive"]["switches"] for s in scen.values())
+    check("controller-fig: hysteresis switches less than naive arg-best",
+          hyst < naive, f"{hyst} vs {naive} switches")
+    if "steady" in scen:
+        r = scen["steady"]["controllers"]["hysteresis"]["rel_regret_wait"]
+        check("controller-fig: zero-drift regret ~ 0", r <= 0.10,
+              f"steady rel_regret_wait={r:.4f}")
+    return out
+
+
 # ------------------------------------------------------- framework benches
 
 def bench_des_throughput():
@@ -314,6 +430,15 @@ def main():
     for fig in FIGS:
         print(f"[run] {fig.__name__}: {fig.__doc__.splitlines()[0]}")
         out[fig.__name__] = fig(data)
+    for fig, path, hint in (
+            (fig_scale_ratio_vs_faults, CHAOS_GRID_PATH,
+             "PYTHONPATH=src python benchmarks/paper_sweep.py --chaos"),
+            (fig_controller_regret, CONTROLLER_PATH,
+             "PYTHONPATH=src python benchmarks/controller_sweep.py")):
+        artifact = _load_optional(path, hint)
+        if artifact is not None:
+            print(f"[run] {fig.__name__}: {fig.__doc__.splitlines()[0]}")
+            out[fig.__name__] = fig(artifact)
     out["bench_des"] = bench_des_throughput()
     out["bench_cluster"] = bench_cluster_sim()
     with open(os.path.join(RESULTS, "figures.json"), "w") as f:

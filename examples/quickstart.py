@@ -34,3 +34,18 @@ print(f"\nadministrator recommendation: scale ratio k >= {thr.threshold} "
       f"queue-time plateau;\nraising k further buys nothing (paper §8); "
       f"lowering k raises full utilization\nbut inflates queue time "
       f"(the paper's central trade-off).")
+
+# --- streaming: the same answer, live ------------------------------------
+# Everything above is offline — one full trace, one sweep, one k. The
+# streaming service (`repro.service`) answers "what k right now" instead:
+# it cuts the arriving trace into fixed-size windows, runs this same sweep
+# on each window as one cached lane program (compile once, ~ms per tick),
+# and a plateau-aware hysteresis controller moves k only when the optimum
+# leaves the current 5% plateau — so window noise doesn't thrash the
+# cluster. Try it on a drifting workload:
+#
+#   PYTHONPATH=src python examples/streaming_controller.py
+#   PYTHONPATH=src python -m repro.launch.service --scenario intensity_step
+#
+# The regret study (controller vs hindsight oracles, per drift scenario)
+# is `benchmarks/controller_sweep.py` -> results/BENCH_controller.json.

@@ -18,7 +18,7 @@ from repro.core.sweep import (CHAOS_AXIS_FIELDS, PAPER_INIT_PROPS,
                               cohort_lane_sharding, lane_padding,
                               lane_sharding, plateau_threshold, resolve_mode,
                               run_baselines, run_cohort_grid,
-                              run_packet_grid, sweep_plan)
+                              run_packet_grid, run_window_oracle, sweep_plan)
 
 __all__ = [
     "packet", "precision", "CohortKey", "WorkloadCohort", "cohort_key",
@@ -33,5 +33,6 @@ __all__ = [
     "PlateauResult",
     "chaos_axis_len", "chaos_lane_grid", "cohort_lane_sharding",
     "lane_padding", "lane_sharding", "plateau_threshold", "resolve_mode",
-    "run_baselines", "run_cohort_grid", "run_packet_grid", "sweep_plan",
+    "run_baselines", "run_cohort_grid", "run_packet_grid",
+    "run_window_oracle", "sweep_plan",
 ]

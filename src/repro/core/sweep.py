@@ -78,10 +78,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision
-from repro.core.des import (ChaosConfig, chaos_is_inert, event_budget,
-                            pack_workload, resolve_max_requeues,
-                            resolve_ring, simulate_packet,
-                            simulate_packet_scan)
+from repro.core.des import (ChaosConfig, PackedWorkload, chaos_is_inert,
+                            event_budget, pack_workload,
+                            resolve_max_requeues, resolve_ring,
+                            simulate_packet, simulate_packet_scan)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.workload.lublin import Workload
@@ -828,6 +828,62 @@ def run_packet_grid(wl: Workload,
             lambda x: np.asarray(x).reshape(shape + x.shape[1:]), lanes)
         _enforce_budget(out, on_budget_exhausted, "run_packet_grid",
                         ks, s_props)
+        return out
+
+
+def run_window_oracle(pw: PackedWorkload,
+                      ks: Sequence[float],
+                      s_init: float,
+                      m_nodes: int,
+                      ring: int | None = None,
+                      mode: str = "auto",
+                      chunk_lanes: int | None = None,
+                      on_budget_exhausted: str = "raise") -> Metrics:
+    """One control tick of the streaming service: all candidate scale
+    ratios on a pre-packed workload window, as one batched lane program.
+
+    This is `run_packet_grid` re-cut for the monitor → decide → actuate
+    loop of `repro.service`: the caller owns packing (windows arrive
+    already packed, via `pack_workload` on a `slice_window` output) and
+    passes ONE init time `s_init` in seconds (typically from the monitor's
+    windowed runtime signal, not a whole s_props axis), so the returned
+    Metrics leaves are [len(ks)] — the tick's tuning curve. Because the
+    windowing layer holds `window_jobs` fixed, every tick shares the
+    packed shapes and the module-level jit caches (`_packet_lanes` /
+    `_packet_one`): the lane program traces on the first tick and only
+    dispatches afterwards.
+
+    Dtype follows the packed window (pack under `precision.dtype_scope`
+    for float64); the sweep re-enters that scope here so a float64 service
+    loop never leaks global x64 state. Modes as in `run_packet_grid`
+    minus the legacy vmap layouts ("auto" resolves over the K lanes of
+    this single tick).
+    """
+    dtype = np.dtype(pw.submit.dtype)
+    K = len(ks)
+    if K < 1:
+        raise ValueError("run_window_oracle needs at least one candidate k")
+    resolved = resolve_mode(mode, K)
+    if resolved in ("vmap_k", "vmap_s"):
+        raise ValueError(
+            f"mode={resolved!r} is a grid layout; the window oracle has a "
+            "single lane axis — use 'auto', 'seq', 'chunked' or 'fused'")
+    with precision.dtype_scope(dtype):
+        m_nodes = int(m_nodes)
+        ring = resolve_ring(m_nodes, pw.n_jobs) if ring is None else int(ring)
+        k_lanes = jnp.asarray(ks, dtype)
+        s_lanes = jnp.full((K,), s_init, dtype)
+        if resolved == "seq":
+            cells = [_packet_one(pw, k_lanes[i], s_lanes[i], m_nodes, ring)
+                     for i in range(K)]
+            lanes = jax.tree.map(lambda *x: jnp.stack(x), *cells)
+        elif resolved == "chunked":
+            lanes = _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring,
+                                     max(1, int(chunk_lanes or CHUNK_LANES)))
+        else:                       # fused
+            lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring)
+        out = jax.tree.map(np.asarray, lanes)
+        _enforce_budget(out, on_budget_exhausted, "run_window_oracle", ks)
         return out
 
 

@@ -1,0 +1,68 @@
+"""Streaming-service driver: the closed-loop scale-ratio controller.
+
+  PYTHONPATH=src python -m repro.launch.service --scenario intensity_step \\
+      --jobs 2000 --window-jobs 250 --stride-jobs 125
+plays one drift scenario (see `repro.workload.windows.drift_scenarios`)
+through the monitor → decide → actuate loop of `repro.service` and prints
+the tick log plus each controller's regret scorecard. The full
+multi-scenario study with gates is `benchmarks/controller_sweep.py`.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.service import ServiceConfig, run_service
+from repro.service.driver import default_controllers
+from repro.workload.windows import drift_scenarios
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="intensity_step",
+                    help="steady | intensity_ramp | intensity_step | "
+                         "homogeneity_ramp | homogeneity_step")
+    ap.add_argument("--jobs", type=int, default=2000)
+    ap.add_argument("--segments", type=int, default=8)
+    ap.add_argument("--nodes", type=int, default=100)
+    ap.add_argument("--window-jobs", type=int, default=250)
+    ap.add_argument("--stride-jobs", type=int, default=None)
+    ap.add_argument("--s-prop", type=float, default=0.05)
+    ap.add_argument("--mode", default="auto",
+                    help="oracle dispatch layout (auto|seq|chunked|fused)")
+    ap.add_argument("--float64", action="store_true",
+                    help="run the oracle in float64 (scoped x64 opt-in)")
+    args = ap.parse_args(argv)
+
+    flows = drift_scenarios(n_jobs=args.jobs, nodes=args.nodes,
+                            n_segments=args.segments)
+    if args.scenario not in flows:
+        raise SystemExit(f"unknown scenario {args.scenario!r}; "
+                         f"available: {sorted(flows)}")
+    wl = flows[args.scenario]
+    config = ServiceConfig(window_jobs=args.window_jobs,
+                           stride_jobs=args.stride_jobs,
+                           s_prop=args.s_prop, mode=args.mode,
+                           dtype="float64" if args.float64 else "float32")
+    out = run_service(wl, config, default_controllers(config))
+
+    print(f"[service] {args.scenario}: {out['n_ticks']} ticks of "
+          f"{config.window_jobs} jobs over {len(wl.submit)} total "
+          f"({out['config']['n_dropped_jobs']} dropped past the last "
+          f"window), {len(config.ks)} candidate k's per tick")
+    print(f"{'tick':>4} {'offered':>8} {'best k':>7} {'plateau k':>9} "
+          f"{'hyst k':>7} {'naive k':>8} {'oracle':>8}")
+    for t in out["ticks"]:
+        print(f"{t['tick']:>4} {t['signals']['offered_load']:>8.3f} "
+              f"{t['best_k']:>7g} {t['plateau_k']:>9g} "
+              f"{t['controllers']['hysteresis']['realized_k']:>7g} "
+              f"{t['controllers']['naive']['realized_k']:>8g} "
+              f"{t['oracle_ms']:>6.0f}ms")
+    for name, s in out["controllers"].items():
+        print(f"[service] {name}: switches={s['switches']} "
+              f"rel_regret_wait={s['rel_regret_wait']:.4f} "
+              f"mean_regret_useful={s['mean_regret_useful']:.5f} "
+              f"vs_plateau={s['mean_wait_vs_plateau']:+.2f}s/tick")
+
+
+if __name__ == "__main__":
+    main()

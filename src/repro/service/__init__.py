@@ -1,0 +1,51 @@
+"""Streaming Packet service: a closed-loop scale-ratio controller.
+
+The offline stack answers "which scale ratio k *was* best" after a full
+sweep; this package answers "which k *right now*" while jobs stream in.
+It is a monitor → decide → actuate feedback loop, one iteration ("control
+tick") per workload window, with the fused (k-candidate) lane engine as
+the controller's inner oracle:
+
+* **monitor** (`repro.service.monitor`) — windowed and rolling (EWMA)
+  signals over the most recent job window: arrival rate, offered load,
+  runtime scale and dispersion (the homogeneity proxy), and the init
+  time the paper's s parameter maps to for this window's runtime mix.
+  The init time feeds the oracle; the smoothed signals and their deltas
+  are provenance that explains *why* the optimum moved.
+
+* **decide** (`repro.service.controller`) — each tick, the oracle
+  (`repro.core.sweep.run_window_oracle`) evaluates ALL candidate k's on
+  the recent window as one batched lane program (the packed window keeps
+  a fixed shape, so the program compiles once and only dispatches on
+  later ticks). `HysteresisController` commits the arg-best k with
+  plateau-aware hysteresis built on `plateau_threshold`'s tolerance
+  model: it holds the current k while it stays inside the new curve's 5%
+  plateau band and moves only when the optimum leaves it — the paper's
+  own observation (a wide flat plateau around k*) turned into a
+  stability rule. `NaiveController` commits the arg-best every tick and
+  exists as the A/B foil.
+
+* **actuate** (`repro.service.driver`) — `run_service` plays a trace
+  window by window. The k committed at tick t-1 is what the service
+  *realizes* on tick t's window (one-tick actuation delay, as a live
+  scheduler would); per-tick provenance records the tuning curve, every
+  controller's decision, and regret vs. the window's hindsight optima.
+  Multiple controllers share one oracle call per tick, so A/Bs see
+  identical inputs by construction.
+
+Regret (avg_wait and useful_util) is measured against the per-tick
+hindsight arg-best — the realized k is always one of the oracle's
+candidates, so regret is >= 0 by construction and == 0 only when the
+controller was already sitting on the optimum — and, signed, against the
+offline `plateau_threshold` recommendation applied per window.
+`benchmarks/controller_sweep.py` runs the drift-scenario study
+(`repro.workload.windows.drift_scenarios`) and gates on it in CI.
+"""
+from repro.service.controller import (Decision, HysteresisController,
+                                      NaiveController)
+from repro.service.driver import ServiceConfig, run_service
+from repro.service.monitor import RollingMonitor, WindowSignals, window_signals
+
+__all__ = ["Decision", "HysteresisController", "NaiveController",
+           "ServiceConfig", "run_service", "RollingMonitor", "WindowSignals",
+           "window_signals"]

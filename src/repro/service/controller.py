@@ -1,0 +1,107 @@
+"""Decide stage: plateau-aware hysteresis over a tick's tuning curve.
+
+The oracle hands decide() the avg_wait curve over the candidate k's for
+the most recent window. The paper's central empirical fact is that this
+curve has a wide, flat plateau around its optimum (that's why
+`plateau_threshold` reports a *smallest sufficient* k, not a unique
+arg-min) — under window noise the arg-best hops between near-tied plateau
+members every tick. `HysteresisController` therefore treats the plateau,
+not the arg-min, as the stability region: hold the current k while its
+wait stays within the plateau band of the new best, move (to the new
+arg-best) only when it leaves. `NaiveController` commits the arg-best
+unconditionally and is the A/B foil `benchmarks/controller_sweep.py`
+gates against (hysteresis must match its regret with fewer switches).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.sweep import FLOAT32_AVG_WAIT_RTOL, plateau_threshold
+
+
+class Decision(NamedTuple):
+    """One decide() outcome, with the evidence it was based on."""
+    k: float            # the committed scale ratio (actuated next tick)
+    moved: bool         # did the controller change k this tick
+    reason: str         # "bootstrap" | "hold" | "left-plateau" | "argbest"
+    best_k: float       # this tick's hindsight arg-best candidate
+    best_wait: float    # avg_wait at best_k
+    hold_tol: float     # the plateau band half-width used (seconds)
+    plateau_k: float    # offline plateau_threshold recommendation (provenance)
+
+
+def _validate_curve(ks, avg_wait) -> tuple[np.ndarray, np.ndarray]:
+    ks = np.asarray(ks, np.float64)
+    w = np.asarray(avg_wait, np.float64)
+    if ks.ndim != 1 or ks.shape != w.shape or len(ks) == 0:
+        raise ValueError(
+            f"decide() wants matching 1-D ks/avg_wait, got {ks.shape} "
+            f"and {w.shape}")
+    if not np.all(np.isfinite(w)):
+        raise ValueError("avg_wait curve contains non-finite values")
+    return ks, w
+
+
+class HysteresisController:
+    """Commit arg-best k, but only when the held k leaves the 5% plateau.
+
+    The hold band reuses `plateau_threshold`'s tolerance model:
+    ``rel_tol * best_wait + abs_tol``, with ``abs_tol`` defaulting to the
+    measured float32 avg_wait envelope (`FLOAT32_AVG_WAIT_RTOL`, scaled
+    by the plateau level) so float noise alone can never trigger a move.
+    Stateful: one instance per controlled stream.
+    """
+
+    name = "hysteresis"
+
+    def __init__(self, rel_tol: float = 0.05, abs_tol: float | None = None):
+        if rel_tol < 0:
+            raise ValueError(f"rel_tol must be >= 0, got {rel_tol}")
+        self.rel_tol = float(rel_tol)
+        self.abs_tol = abs_tol
+        self.k: float | None = None
+
+    def decide(self, ks, avg_wait) -> Decision:
+        ks, w = _validate_curve(ks, avg_wait)
+        i_best = int(np.argmin(w))
+        best_k, best_w = float(ks[i_best]), float(w[i_best])
+        plat = plateau_threshold(ks, w, rel_tol=self.rel_tol,
+                                 abs_tol=self.abs_tol)
+        abs_tol = (FLOAT32_AVG_WAIT_RTOL * max(best_w, 1.0)
+                   if self.abs_tol is None else float(self.abs_tol))
+        tol = self.rel_tol * max(best_w, 1.0) + abs_tol
+
+        held = np.flatnonzero(ks == self.k) if self.k is not None else []
+        if len(held) == 0:
+            # first tick, or the candidate grid changed under us
+            self.k = best_k
+            return Decision(best_k, True, "bootstrap", best_k, best_w,
+                            tol, plat.threshold)
+        if float(w[held[0]]) <= best_w + tol:
+            return Decision(float(self.k), False, "hold", best_k, best_w,
+                            tol, plat.threshold)
+        self.k = best_k
+        return Decision(best_k, True, "left-plateau", best_k, best_w,
+                        tol, plat.threshold)
+
+
+class NaiveController:
+    """Every-tick arg-best commit — the no-hysteresis A/B foil."""
+
+    name = "naive"
+
+    def __init__(self):
+        self.k: float | None = None
+
+    def decide(self, ks, avg_wait) -> Decision:
+        ks, w = _validate_curve(ks, avg_wait)
+        i_best = int(np.argmin(w))
+        best_k, best_w = float(ks[i_best]), float(w[i_best])
+        plat = plateau_threshold(ks, w)
+        moved = self.k is None or best_k != self.k
+        reason = "bootstrap" if self.k is None else "argbest"
+        self.k = best_k
+        return Decision(best_k, moved, reason, best_k, best_w, 0.0,
+                        plat.threshold)

@@ -1,0 +1,191 @@
+"""Actuate stage + tick loop: play a trace through the streaming service.
+
+`run_service` is the reference driver for the monitor → decide → actuate
+loop (see the package docstring): it cuts a trace into fixed-shape
+windows, runs the fused lane oracle once per tick, lets every registered
+controller decide on the SAME curve, and scores what each controller's
+held k actually realized on that window. The committed k takes effect on
+the *next* tick (one-tick actuation delay — a live scheduler retunes for
+traffic it hasn't seen yet), except the bootstrap tick, where the service
+turns on with the oracle's first recommendation.
+
+Regret bookkeeping per controller and tick:
+
+* ``regret_wait``   = avg_wait(realized k) - min over candidates (>= 0)
+* ``regret_useful`` = max useful_util over candidates - realized (>= 0)
+* ``wait_vs_plateau`` (signed) = avg_wait(realized k) - avg_wait at the
+  offline `plateau_threshold` recommendation for this window's curve —
+  the per-window hindsight application of the paper's offline tuning
+  rule. Negative means the controller beat the offline rule.
+
+Everything returned is JSON-ready; `benchmarks/controller_sweep.py`
+persists it as BENCH_controller.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import precision
+from repro.core.des import pack_workload, resolve_ring
+from repro.core.sweep import (PAPER_SCALE_RATIOS, plateau_threshold,
+                              run_window_oracle)
+from repro.service.controller import HysteresisController, NaiveController
+from repro.service.monitor import RollingMonitor, window_signals
+from repro.workload.lublin import Workload
+from repro.workload.windows import WindowSpec, iter_windows, n_dropped
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of one service run (all ticks share them)."""
+    ks: tuple[float, ...] = PAPER_SCALE_RATIOS   # candidate scale ratios
+    s_prop: float = 0.05          # init proportion fed to the monitor
+    window_jobs: int = 400        # jobs per control-tick window
+    stride_jobs: int | None = None  # window start spacing (None: tumbling)
+    dtype: str = "float32"        # oracle dtype ("float64" opts into x64)
+    mode: str = "auto"            # oracle dispatch layout
+    rel_tol: float = 0.05         # the 5% plateau band (paper's tolerance)
+    abs_tol: float | None = None  # plateau abs slack (None: float32 envelope)
+    ewm_alpha: float = 0.5        # monitor smoothing weight
+    on_budget_exhausted: str = "raise"
+
+    def np_dtype(self):
+        return np.dtype(self.dtype)
+
+
+def default_controllers(config: ServiceConfig):
+    """The study pair: plateau hysteresis vs. the naive arg-best foil."""
+    return [HysteresisController(rel_tol=config.rel_tol,
+                                 abs_tol=config.abs_tol),
+            NaiveController()]
+
+
+def _controller_summary(rec: dict, aw_best: np.ndarray) -> dict:
+    realized = np.asarray(rec["realized_wait"], np.float64)
+    regret_w = np.asarray(rec["regret_wait"], np.float64)
+    regret_u = np.asarray(rec["regret_useful"], np.float64)
+    vs_plat = np.asarray(rec["wait_vs_plateau"], np.float64)
+    total_best = float(np.sum(aw_best))
+    return {
+        "n_ticks": len(realized),
+        "switches": int(rec["switches"]),
+        "mean_regret_wait": float(regret_w.mean()),
+        "total_regret_wait": float(regret_w.sum()),
+        # relative to the hindsight per-tick optimum's total wait
+        "rel_regret_wait": float(regret_w.sum() / max(total_best, 1e-9)),
+        "mean_regret_useful": float(regret_u.mean()),
+        "mean_wait_vs_plateau": float(vs_plat.mean()),
+        "mean_realized_wait": float(realized.mean()),
+        "k_trajectory": [float(k) for k in rec["k"]],
+    }
+
+
+def run_service(wl: Workload,
+                config: ServiceConfig = ServiceConfig(),
+                controllers: Sequence | None = None) -> dict:
+    """Play one trace through the service; score every controller.
+
+    All controllers consume the same per-tick oracle curve (one
+    `run_window_oracle` call per tick, shared), so their regrets differ
+    only by policy. Controllers are stateful — pass fresh instances.
+    """
+    if controllers is None:
+        controllers = default_controllers(config)
+    names = [c.name for c in controllers]
+    if len(set(names)) != len(names):
+        raise ValueError(f"controller names must be unique, got {names}")
+
+    dtype = config.np_dtype()
+    spec = WindowSpec(config.window_jobs, config.stride_jobs)
+    m_nodes = int(wl.params.nodes)
+    ks = np.asarray(config.ks, np.float64)
+    monitor = RollingMonitor(alpha=config.ewm_alpha)
+
+    live: dict[str, float | None] = {n: None for n in names}
+    rec = {n: {"k": [], "realized_wait": [], "regret_wait": [],
+               "regret_useful": [], "wait_vs_plateau": [], "switches": 0}
+           for n in names}
+    ticks = []
+    aw_best_all = []
+
+    for t, (lo, hi, win) in enumerate(iter_windows(wl, spec)):
+        sig = window_signals(win, config.s_prop)
+        smooth = monitor.observe(sig)
+        with precision.dtype_scope(dtype):
+            pw = pack_workload(win, dtype)
+            ring = resolve_ring(m_nodes, pw.n_jobs)
+        t0 = time.perf_counter()
+        m = run_window_oracle(pw, config.ks, sig.init_time, m_nodes,
+                              ring=ring, mode=config.mode,
+                              on_budget_exhausted=config.on_budget_exhausted)
+        oracle_ms = (time.perf_counter() - t0) * 1e3
+        aw = np.asarray(m.avg_wait, np.float64)
+        uu = np.asarray(m.useful_util, np.float64)
+        i_best = int(np.argmin(aw))
+        best_uu = float(np.max(uu))
+        plat = plateau_threshold(ks, aw, rel_tol=config.rel_tol,
+                                 abs_tol=config.abs_tol)
+        i_plat = int(np.argmin(np.abs(ks - plat.threshold)))
+        aw_best_all.append(float(aw[i_best]))
+
+        tick = {"tick": t, "window": [int(lo), int(hi)],
+                "signals": smooth, "oracle_ms": float(oracle_ms),
+                "best_k": float(ks[i_best]),
+                "best_wait": float(aw[i_best]),
+                "plateau_k": float(plat.threshold),
+                "plateau_wait": float(aw[i_plat]),
+                "controllers": {}}
+
+        for ctl in controllers:
+            name = ctl.name
+            dec = ctl.decide(ks, aw)
+            # actuation delay: tick t realizes the k held coming INTO the
+            # tick; the new decision takes effect at t+1. Bootstrap tick
+            # realizes the first decision (the service starts with it).
+            k_real = live[name] if live[name] is not None else dec.k
+            live[name] = dec.k
+            i_real = int(np.argmin(np.abs(ks - k_real)))
+            r = rec[name]
+            r["k"].append(float(k_real))
+            r["realized_wait"].append(float(aw[i_real]))
+            r["regret_wait"].append(float(aw[i_real] - aw[i_best]))
+            r["regret_useful"].append(float(best_uu - uu[i_real]))
+            r["wait_vs_plateau"].append(float(aw[i_real] - aw[i_plat]))
+            if dec.moved and dec.reason != "bootstrap":
+                r["switches"] += 1
+            tick["controllers"][name] = {
+                "realized_k": float(k_real), "committed_k": float(dec.k),
+                "moved": bool(dec.moved), "reason": dec.reason,
+                "hold_tol": float(dec.hold_tol)}
+        ticks.append(tick)
+
+    if not ticks:
+        raise ValueError(
+            f"trace of {len(wl.submit)} jobs yields no full "
+            f"{config.window_jobs}-job window")
+
+    aw_best_arr = np.asarray(aw_best_all, np.float64)
+    return {
+        "config": {
+            "ks": [float(k) for k in config.ks], "s_prop": config.s_prop,
+            "window_jobs": config.window_jobs,
+            "stride_jobs": spec.stride, "dtype": str(dtype),
+            "mode": config.mode, "rel_tol": config.rel_tol,
+            "m_nodes": m_nodes,
+            "n_dropped_jobs": int(n_dropped(len(wl.submit), spec)),
+        },
+        "n_ticks": len(ticks),
+        "oracle": {
+            "best_k": [t["best_k"] for t in ticks],
+            "plateau_k": [t["plateau_k"] for t in ticks],
+            "total_best_wait": float(aw_best_arr.sum()),
+            "oracle_ms": [t["oracle_ms"] for t in ticks],
+        },
+        "controllers": {n: _controller_summary(rec[n], aw_best_arr)
+                        for n in names},
+        "ticks": ticks,
+    }

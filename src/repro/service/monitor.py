@@ -1,0 +1,94 @@
+"""Monitor stage: windowed + rolling workload signals for the controller.
+
+`window_signals` reduces one job window to the quantities the decide
+stage and the provenance log care about; `RollingMonitor` smooths them
+across ticks (EWMA) and exposes per-tick deltas, so drift shows up as a
+signal trend rather than window-to-window noise. The one signal that is
+load-bearing (not just observability) is `init_time`: the paper's init
+proportion s maps to seconds through the *window's* mean runtime, so the
+oracle is always asked about the traffic actually on the floor.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.workload.lublin import Workload
+
+
+class WindowSignals(NamedTuple):
+    """One window, reduced to controller-facing scalars (all float64)."""
+    n_jobs: int
+    span: float            # seconds covered by the window's submits
+    arrival_rate: float    # jobs per second
+    mean_runtime: float    # seconds
+    runtime_cv: float      # coefficient of variation — homogeneity proxy
+    mean_nodes: float      # mean requested node count
+    offered_load: float    # sum(work) / (M * span): the calculated rho
+    init_time: float       # seconds of group init the s proportion buys here
+
+
+def window_signals(wl: Workload, s_prop: float) -> WindowSignals:
+    """Reduce a window (a `slice_window` output) to `WindowSignals`.
+
+    `init_time` follows `Workload.init_time_for_proportion`: s_prop is a
+    proportion of the mean runtime, evaluated on THIS window, so a
+    homogeneity or intensity shift moves the oracle's s operand with it.
+    """
+    submit = np.asarray(wl.submit, np.float64)
+    runtime = np.asarray(wl.runtime, np.float64)
+    n = len(submit)
+    if n == 0:
+        raise ValueError("window_signals needs a non-empty window")
+    span = float(max(submit[-1] - submit[0], 1.0))
+    mean_rt = float(runtime.mean())
+    return WindowSignals(
+        n_jobs=n,
+        span=span,
+        arrival_rate=n / span,
+        mean_runtime=mean_rt,
+        runtime_cv=float(runtime.std() / max(mean_rt, 1e-12)),
+        mean_nodes=float(np.asarray(wl.nodes, np.float64).mean()),
+        offered_load=float(np.asarray(wl.work, np.float64).sum()
+                           / (wl.params.nodes * span)),
+        init_time=float(wl.init_time_for_proportion(s_prop)),
+    )
+
+
+#: WindowSignals fields the monitor smooths (the rest are structural)
+_SMOOTHED = ("arrival_rate", "mean_runtime", "runtime_cv", "mean_nodes",
+             "offered_load", "init_time")
+
+
+class RollingMonitor:
+    """EWMA over window signals, with per-tick drift deltas.
+
+    ``alpha`` is the weight of the newest window (alpha=1 disables
+    smoothing). `observe` returns a flat dict — raw signals, their
+    smoothed values (``ewm_*``), and the change of each smoothed value
+    since the previous tick (``delta_*``) — ready for the driver's
+    per-tick provenance log.
+    """
+
+    def __init__(self, alpha: float = 0.5):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = float(alpha)
+        self._ewm: dict[str, float] | None = None
+
+    def observe(self, sig: WindowSignals) -> dict[str, float]:
+        raw = sig._asdict()
+        prev = self._ewm
+        ewm = {}
+        for name in _SMOOTHED:
+            x = float(raw[name])
+            ewm[name] = (x if prev is None
+                         else self.alpha * x + (1 - self.alpha) * prev[name])
+        out = {k: (int(v) if k == "n_jobs" else float(v))
+               for k, v in raw.items()}
+        out.update({f"ewm_{k}": v for k, v in ewm.items()})
+        out.update({f"delta_{k}": (0.0 if prev is None else ewm[k] - prev[k])
+                    for k in _SMOOTHED})
+        self._ewm = ewm
+        return out

@@ -1,3 +1,12 @@
-from repro.workload.lublin import WorkloadParams, Workload, generate_workload, paper_workloads
+from repro.workload.lublin import (WorkloadParams, Workload,
+                                   generate_workload, generate_workload_batch,
+                                   paper_workloads, workload_statics)
+from repro.workload.windows import (WindowSpec, drift_scenarios,
+                                    drift_workload, iter_windows,
+                                    iter_windows_batch, n_dropped,
+                                    slice_window, window_bounds)
 
-__all__ = ["WorkloadParams", "Workload", "generate_workload", "paper_workloads"]
+__all__ = ["WorkloadParams", "Workload", "generate_workload",
+           "generate_workload_batch", "paper_workloads", "workload_statics",
+           "WindowSpec", "drift_scenarios", "drift_workload", "iter_windows",
+           "iter_windows_batch", "n_dropped", "slice_window", "window_bounds"]

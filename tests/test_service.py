@@ -1,0 +1,201 @@
+"""Streaming service: decide semantics, oracle parity, regret invariants.
+
+The controller's plateau-hold rule is pinned on hand-built curves (no
+simulation), the window oracle is pinned bitwise against the offline
+grid driver on the same window, and the end-to-end loop is pinned on its
+construction invariants: regret vs the per-tick optimum is >= 0, the
+realized k always lags the commitment by one tick, and hysteresis never
+switches more than the naive arg-best foil.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pack_workload, precision, resolve_ring
+from repro.core.sweep import run_window_oracle, run_packet_grid
+from repro.service import (HysteresisController, NaiveController,
+                           ServiceConfig, run_service)
+from repro.service.driver import default_controllers
+from repro.service.monitor import RollingMonitor, window_signals
+from repro.workload.lublin import WorkloadParams, generate_workload
+from repro.workload.windows import drift_workload, slice_window
+
+KS = np.array([1.0, 2.0, 4.0, 8.0, 16.0])
+
+
+class TestHysteresisDecide:
+    def test_bootstrap_commits_argbest(self):
+        c = HysteresisController()
+        d = c.decide(KS, [100.0, 50.0, 10.0, 9.0, 10.0])
+        assert d.k == 8.0 and d.moved and d.reason == "bootstrap"
+        assert d.best_k == 8.0 and d.best_wait == 9.0
+
+    def test_holds_inside_stable_plateau(self):
+        """The arg-best hopping between near-tied plateau members must not
+        move the committed k (the paper's plateau as the stability region)."""
+        c = HysteresisController()
+        c.decide(KS, [100.0, 50.0, 10.0, 9.0, 10.0])       # commits k=8
+        d = c.decide(KS, [100.0, 50.0, 9.5, 10.0, 9.4])    # best hops to 16
+        assert not d.moved and d.k == 8.0 and d.reason == "hold"
+        assert c.k == 8.0
+        # ... and stays held over many noisy re-ties
+        for w in ([99.0, 48.0, 9.3, 9.6, 9.5], [101.0, 51.0, 9.9, 9.7, 9.6]):
+            assert not c.decide(KS, w).moved
+
+    def test_moves_when_leaving_plateau(self):
+        c = HysteresisController()
+        c.decide(KS, [100.0, 50.0, 10.0, 9.0, 10.0])       # commits k=8
+        d = c.decide(KS, [100.0, 50.0, 30.0, 25.0, 5.0])   # k=8 left plateau
+        assert d.moved and d.k == 16.0 and d.reason == "left-plateau"
+
+    def test_grid_change_rebootstraps(self):
+        c = HysteresisController()
+        c.decide(KS, [5.0, 4.0, 3.0, 2.0, 1.0])
+        d = c.decide(KS * 10, [5.0, 4.0, 3.0, 2.0, 1.0])
+        assert d.reason == "bootstrap" and d.k == 160.0
+
+    def test_validation(self):
+        c = HysteresisController()
+        with pytest.raises(ValueError):
+            c.decide(KS, [1.0, 2.0])               # length mismatch
+        with pytest.raises(ValueError):
+            c.decide([], [])                        # empty curve
+        with pytest.raises(ValueError):
+            c.decide(KS, [1.0, 2.0, np.nan, 4.0, 5.0])
+        with pytest.raises(ValueError):
+            HysteresisController(rel_tol=-0.1)
+
+    def test_zero_tolerance_degenerates_to_naive(self):
+        strict = HysteresisController(rel_tol=0.0, abs_tol=0.0)
+        naive = NaiveController()
+        curves = ([3.0, 2.0, 1.0, 2.0, 3.0], [3.0, 2.0, 1.5, 1.0, 3.0],
+                  [1.0, 2.0, 3.0, 4.0, 5.0])
+        for w in curves:
+            assert strict.decide(KS, w).k == naive.decide(KS, w).k
+
+
+class TestNaiveDecide:
+    def test_switches_whenever_argbest_moves(self):
+        c = NaiveController()
+        assert c.decide(KS, [3.0, 2.0, 1.0, 2.0, 3.0]).k == 4.0
+        d = c.decide(KS, [3.0, 2.0, 1.01, 1.0, 3.0])
+        assert d.moved and d.k == 8.0 and d.reason == "argbest"
+        assert not c.decide(KS, [3.0, 2.0, 1.5, 1.0, 3.0]).moved
+
+
+class TestMonitor:
+    def test_window_signals(self):
+        wl = generate_workload(WorkloadParams(
+            n_jobs=300, nodes=100, load=0.9, homogeneous=True, seed=2))
+        win = slice_window(wl, 50, 250)
+        sig = window_signals(win, 0.05)
+        assert sig.n_jobs == 200
+        assert sig.span == pytest.approx(win.submit[-1] - win.submit[0])
+        assert sig.arrival_rate == pytest.approx(200 / sig.span)
+        assert sig.init_time == pytest.approx(
+            win.init_time_for_proportion(0.05))
+        assert sig.offered_load > 0
+
+    def test_rolling_monitor_smooths_and_deltas(self):
+        wl = generate_workload(WorkloadParams(
+            n_jobs=300, nodes=100, load=0.9, homogeneous=True, seed=2))
+        sig = window_signals(slice_window(wl, 0, 150), 0.05)
+        m = RollingMonitor(alpha=0.5)
+        first = m.observe(sig)
+        assert first["ewm_offered_load"] == pytest.approx(sig.offered_load)
+        assert first["delta_offered_load"] == 0.0
+        sig2 = window_signals(slice_window(wl, 150, 300), 0.05)
+        second = m.observe(sig2)
+        assert second["ewm_offered_load"] == pytest.approx(
+            0.5 * sig2.offered_load + 0.5 * sig.offered_load)
+        with pytest.raises(ValueError):
+            RollingMonitor(alpha=0.0)
+
+
+class TestWindowOracle:
+    def test_matches_offline_grid_bitwise(self):
+        """One control tick == the offline sweep on the same window: the
+        oracle through pre-packed operands must reproduce run_packet_grid's
+        chunked column exactly (same engine, same lane ids)."""
+        wl = generate_workload(WorkloadParams(
+            n_jobs=250, nodes=100, load=0.9, homogeneous=True, seed=4))
+        win = slice_window(wl, 0, 200)
+        ks, s_prop = (0.5, 2.0, 8.0, 40.0), 0.05
+        grid = run_packet_grid(win, ks=ks, s_props=[s_prop], mode="chunked")
+        pw = pack_workload(win)
+        m = run_window_oracle(pw, ks, win.init_time_for_proportion(s_prop),
+                              win.params.nodes, mode="chunked")
+        for f in ("avg_wait", "med_wait", "useful_util", "n_groups", "ok"):
+            a, b = np.asarray(getattr(m, f)), np.asarray(getattr(grid, f))
+            assert a.shape == (len(ks),)
+            assert np.array_equal(a, b[:, 0]), f
+
+    def test_rejects_grid_layouts_and_empty_ks(self):
+        wl = generate_workload(WorkloadParams(
+            n_jobs=50, nodes=20, load=0.9, homogeneous=True, seed=4))
+        pw = pack_workload(wl)
+        with pytest.raises(ValueError):
+            run_window_oracle(pw, (1.0,), 10.0, 20, mode="vmap_k")
+        with pytest.raises(ValueError):
+            run_window_oracle(pw, (), 10.0, 20)
+
+
+def _steady_trace(n_jobs=600):
+    return drift_workload(
+        WorkloadParams(n_jobs=n_jobs, nodes=100, load=0.9, homogeneous=True,
+                       seed=9, daily_amplitude=0.3),
+        loads=[0.9] * 3)
+
+
+class TestRunService:
+    @pytest.fixture(scope="class")
+    def result(self):
+        config = ServiceConfig(ks=(0.5, 2.0, 8.0, 40.0), window_jobs=200,
+                               mode="chunked")
+        return run_service(_steady_trace(), config,
+                           default_controllers(config))
+
+    def test_tick_count_and_shapes(self, result):
+        assert result["n_ticks"] == 3
+        assert len(result["oracle"]["best_k"]) == 3
+        assert set(result["controllers"]) == {"hysteresis", "naive"}
+
+    def test_regret_nonnegative_by_construction(self, result):
+        """The realized k is always one of the oracle's candidates, so
+        regret vs the per-tick arg-best can never go negative."""
+        for name, s in result["controllers"].items():
+            assert s["mean_regret_wait"] >= -1e-12, name
+            assert s["mean_regret_useful"] >= -1e-12, name
+            assert s["rel_regret_wait"] >= -1e-12, name
+
+    def test_one_tick_actuation_delay(self, result):
+        for name in result["controllers"]:
+            for prev, cur in zip(result["ticks"], result["ticks"][1:]):
+                assert (cur["controllers"][name]["realized_k"]
+                        == prev["controllers"][name]["committed_k"]), name
+
+    def test_hysteresis_holds_inside_stable_plateau(self, result):
+        """On a zero-drift trace the hysteresis controller must not thrash:
+        it may switch at most once after bootstrap, and never more than
+        the naive arg-best foil."""
+        h = result["controllers"]["hysteresis"]
+        n = result["controllers"]["naive"]
+        assert h["switches"] <= 1
+        assert h["switches"] <= n["switches"]
+
+    def test_provenance_recorded(self, result):
+        t = result["ticks"][0]
+        assert {"signals", "oracle_ms", "best_k", "plateau_k"} <= set(t)
+        assert t["signals"]["n_jobs"] == 200
+        assert t["controllers"]["hysteresis"]["reason"] == "bootstrap"
+        assert result["config"]["window_jobs"] == 200
+
+    def test_too_short_trace_raises(self):
+        config = ServiceConfig(window_jobs=10_000)
+        with pytest.raises(ValueError):
+            run_service(_steady_trace(), config)
+
+    def test_duplicate_controller_names_rejected(self):
+        config = ServiceConfig(ks=(1.0, 2.0), window_jobs=200)
+        with pytest.raises(ValueError):
+            run_service(_steady_trace(), config,
+                        [NaiveController(), NaiveController()])

@@ -1,0 +1,205 @@
+"""Windowing layer: bitwise-slice guarantee, bounds, drift scenarios.
+
+The streaming service's reproducibility story rests on two facts pinned
+here: (1) window w of seed s is *bitwise* a slice of the full trace —
+no regeneration, no rounding — in the raw arrays and in the packed
+per-job tables of BOTH simulation dtypes; (2) the drift scenarios are
+seed-stable (sha256 golden digests, same scheme as
+`test_workload_golden.py` — regenerate intentional changes with
+``PYTHONPATH=src python tests/test_windows.py``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import pack_workload, precision
+from repro.workload.lublin import (WorkloadParams, generate_workload,
+                                   generate_workload_batch, workload_statics)
+from repro.workload.windows import (WindowSpec, drift_scenarios,
+                                    drift_workload, iter_windows,
+                                    iter_windows_batch, n_dropped,
+                                    slice_window, window_bounds)
+
+PARAMS = WorkloadParams(n_jobs=600, nodes=100, load=0.9, homogeneous=True,
+                        seed=5)
+
+# drift_scenarios(n_jobs=320, nodes=100, n_segments=4); regen via __main__.
+# Note the structure the digests expose: intensity drift recalibrates
+# RUNTIMES (the arrival process and node/type draws are seed-determined,
+# so submit/nodes/jtype match steady bit-for-bit), while homogeneity-mode
+# drift changes every draw of the heterogeneous segments.
+GOLDEN = {
+    "steady": {
+        "submit": "484664cfa46c63c70a9fe7b2f30124e7cb01292827b6adcbb432bd5fd625828a",
+        "runtime": "b21858f93a76eb595474ac10ca578bbe84b48300b42454373761605989d263f8",
+        "nodes": "ed16e9ba74a6809655cb8629519c6c2fa6f8c32a6a05566d01ee0552a005fd16",
+        "jtype": "511ce8a53ba5ef6f7f0cfd9a9fcb134faa11e45ffe363322afbaea3ed235d83b",
+    },
+    "intensity_ramp": {
+        "submit": "484664cfa46c63c70a9fe7b2f30124e7cb01292827b6adcbb432bd5fd625828a",
+        "runtime": "3effd4602039af071a872fb7af1316155b4dd7fba2e492fdb3c8f0075f027d1b",
+        "nodes": "ed16e9ba74a6809655cb8629519c6c2fa6f8c32a6a05566d01ee0552a005fd16",
+        "jtype": "511ce8a53ba5ef6f7f0cfd9a9fcb134faa11e45ffe363322afbaea3ed235d83b",
+    },
+    "intensity_step": {
+        "submit": "484664cfa46c63c70a9fe7b2f30124e7cb01292827b6adcbb432bd5fd625828a",
+        "runtime": "bd18cd4d03d2f63eb926579c4c4adc1409ce21ac084225617f1330f61d3ec2fd",
+        "nodes": "ed16e9ba74a6809655cb8629519c6c2fa6f8c32a6a05566d01ee0552a005fd16",
+        "jtype": "511ce8a53ba5ef6f7f0cfd9a9fcb134faa11e45ffe363322afbaea3ed235d83b",
+    },
+    "homogeneity_ramp": {
+        "submit": "484664cfa46c63c70a9fe7b2f30124e7cb01292827b6adcbb432bd5fd625828a",
+        "runtime": "b8805bc46af9e05e3adbbf56bdf2ff1169e8c86de422521c5a9ec5fd72d1f265",
+        "nodes": "ed16e9ba74a6809655cb8629519c6c2fa6f8c32a6a05566d01ee0552a005fd16",
+        "jtype": "511ce8a53ba5ef6f7f0cfd9a9fcb134faa11e45ffe363322afbaea3ed235d83b",
+    },
+    "homogeneity_step": {
+        "submit": "05e5566675be4515bdf6e22efc2b5acfa4cc832603651184b9b929b7564cb435",
+        "runtime": "2ff08aeccdc4c93a42b264f141af8f1278077985e15c75261409cafb4e355c65",
+        "nodes": "2d3aca7b5c64d5afff5f9b9b40dc1999e4c0691b7f8f218beffaf701e52c5cac",
+        "jtype": "6165026fb1746ef1d82f249744aa6f6493da07b05eb555c91941d412a526be18",
+    },
+}
+
+
+def _scenarios():
+    return drift_scenarios(n_jobs=320, nodes=100, n_segments=4)
+
+
+class TestSliceWindow:
+    def test_raw_arrays_are_bitwise_views(self):
+        wl = generate_workload(PARAMS)
+        w = slice_window(wl, 100, 300, rebase=False)
+        for f in ("submit", "runtime", "nodes", "work", "jtype"):
+            full = getattr(wl, f)
+            assert np.shares_memory(getattr(w, f), full)
+            assert np.array_equal(getattr(w, f), full[100:300])
+        assert w.params.n_jobs == 200
+
+    def test_rebase_shifts_only_submit(self):
+        wl = generate_workload(PARAMS)
+        w = slice_window(wl, 100, 300)
+        assert np.array_equal(w.submit, wl.submit[100:300] - wl.submit[100])
+        assert w.submit[0] == 0.0
+        assert np.shares_memory(w.runtime, wl.runtime)
+        # the shift is a deterministic float64 op: slicing twice agrees
+        w2 = slice_window(generate_workload(PARAMS), 100, 300)
+        for f in ("submit", "runtime", "nodes", "work", "jtype"):
+            assert np.array_equal(getattr(w, f), getattr(w2, f))
+
+    @pytest.mark.parametrize("dtype", ["float32", "float64"])
+    def test_packed_window_is_bitwise_slice_both_dtypes(self, dtype):
+        """The per-job packed tables of a window equal slices of the full
+        trace's packed tables, bit for bit, in either simulation dtype
+        (per-type tables are rank-relative and legitimately differ)."""
+        wl = generate_workload(PARAMS)
+        with precision.dtype_scope(np.dtype(dtype)):
+            pw_full = pack_workload(wl, np.dtype(dtype))
+            w = slice_window(wl, 150, 350, rebase=False)
+            pw_win = pack_workload(w, np.dtype(dtype))
+            for f in ("work", "runtime", "nodes", "jtype"):
+                a = np.asarray(getattr(pw_win, f))
+                b = np.asarray(getattr(pw_full, f))[150:350]
+                assert a.dtype == b.dtype
+                assert np.array_equal(a, b), f
+            # and packing is deterministic across regenerations
+            w2 = slice_window(generate_workload(PARAMS), 150, 350,
+                              rebase=False)
+            pw_win2 = pack_workload(w2, np.dtype(dtype))
+            for f in ("submit", "work", "tj_submit", "tj_prefw", "cumw"):
+                assert np.array_equal(np.asarray(getattr(pw_win, f)),
+                                      np.asarray(getattr(pw_win2, f))), f
+
+    def test_out_of_range_raises(self):
+        wl = generate_workload(PARAMS)
+        for lo, hi in ((-1, 10), (10, 10), (590, 601), (300, 200)):
+            with pytest.raises(ValueError):
+                slice_window(wl, lo, hi)
+
+
+class TestWindowBounds:
+    def test_tumbling_and_rolling(self):
+        assert window_bounds(600, WindowSpec(200)) == [
+            (0, 200), (200, 400), (400, 600)]
+        assert window_bounds(600, WindowSpec(200, stride_jobs=100)) == [
+            (0, 200), (100, 300), (200, 400), (300, 500), (400, 600)]
+        assert window_bounds(600, WindowSpec(250, stride_jobs=300)) == [
+            (0, 250), (300, 550)]
+
+    def test_partial_tail_dropped(self):
+        assert window_bounds(590, WindowSpec(200)) == [(0, 200), (200, 400)]
+        assert n_dropped(590, WindowSpec(200)) == 190
+        assert window_bounds(100, WindowSpec(200)) == []
+        assert n_dropped(100, WindowSpec(200)) == 100
+        assert n_dropped(600, WindowSpec(200)) == 0
+
+    def test_invalid_spec(self):
+        with pytest.raises(ValueError):
+            WindowSpec(0)
+        with pytest.raises(ValueError):
+            WindowSpec(10, stride_jobs=0)
+
+    def test_iter_windows_fixed_shape(self):
+        wl = generate_workload(PARAMS)
+        wins = list(iter_windows(wl, WindowSpec(200, stride_jobs=150)))
+        assert [(lo, hi) for lo, hi, _ in wins] == window_bounds(
+            600, WindowSpec(200, stride_jobs=150))
+        # every window shares the statics signature -> one jit cache
+        statics = {workload_statics(w) for _, _, w in wins}
+        assert len(statics) == 1
+
+    def test_iter_windows_batch_replicas(self):
+        flows = generate_workload_batch(
+            dataclasses.replace(PARAMS, n_jobs=300), n_replicas=2,
+            name_fmt="r{r}")
+        rows = list(iter_windows_batch(flows, WindowSpec(150)))
+        assert [(n, lo, hi) for n, lo, hi, _ in rows] == [
+            ("r0", 0, 150), ("r0", 150, 300),
+            ("r1", 0, 150), ("r1", 150, 300)]
+        for name, lo, hi, win in rows:
+            assert np.array_equal(win.runtime, flows[name].runtime[lo:hi])
+
+
+class TestDriftScenarios:
+    def test_golden_digests(self):
+        got = {n: wl.golden_digest() for n, wl in _scenarios().items()}
+        assert got == GOLDEN, (
+            "drift scenarios drifted from their golden digests; if "
+            "intentional, regenerate with "
+            "`PYTHONPATH=src python tests/test_windows.py`")
+
+    def test_submits_monotone_and_statics_shared(self):
+        for name, wl in _scenarios().items():
+            assert np.all(np.diff(wl.submit) >= 0), name
+            assert wl.params.nodes == 100 and wl.params.n_types == 8, name
+            assert len(wl.submit) == 320, name
+
+    def test_intensity_ramp_actually_ramps(self):
+        wl = _scenarios()["intensity_ramp"]
+        seg = np.array_split(np.asarray(wl.work), 4)
+        means = [s.mean() for s in seg]
+        # offered load = work per wall-clock; horizon per segment is fixed,
+        # so ramping load must ramp per-segment total work
+        assert means[0] < means[-1]
+
+    def test_homogeneity_step_widens_dispersion(self):
+        wl = _scenarios()["homogeneity_step"]
+        rt = np.asarray(wl.runtime)
+        first, second = rt[:160], rt[160:]
+        cv = lambda x: x.std() / x.mean()
+        assert cv(second) > 1.5 * cv(first)
+
+    def test_segment_count_validation(self):
+        base = dataclasses.replace(PARAMS, n_jobs=100)
+        with pytest.raises(ValueError):
+            drift_workload(base)                      # no segment info
+        with pytest.raises(ValueError):
+            drift_workload(base, n_segments=4, loads=[0.9] * 3)
+        with pytest.raises(ValueError):
+            drift_workload(base, n_segments=200)      # < 1 job per segment
+
+
+if __name__ == "__main__":
+    for name, wl in _scenarios().items():
+        print(f'    "{name}": {wl.golden_digest()!r},')
