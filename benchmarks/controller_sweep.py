@@ -28,15 +28,30 @@ actuation delay over and over while hysteresis holds still.
   * hysteresis total regret <= naive total regret * REGRET_SLACK — the
     switch savings may not be bought with materially worse regret.
 
+``--chaos`` adds the regret-under-faults block: the service re-runs a
+scenario subset with a 3-cell `ChaosConfig` axis (harsh / moderate /
+calm fault regimes, the harsh cell playing the true environment), the
+risk-aware `FaultAwareController` A/B'd against the fault-blind
+hysteresis it inherits from. Its gates:
+
+  * fault_aware total lost_work <= fault-blind hysteresis lost_work
+    (the λ·lost term must actually buy something);
+  * fault_aware wait regret <= hysteresis regret * REGRET_SLACK — the
+    lost-work savings may not be bought with materially worse wait;
+  * a degrade-mode run under injected `TickFaults` (forced budget
+    exhaustion, NaN fault telemetry, a dropped monitor window) completes
+    every tick with per-tick health records.
+
 Results land in ``benchmarks/results/BENCH_controller.json`` (or
 ``--out PATH``). Usage:
 
     PYTHONPATH=src python benchmarks/controller_sweep.py            # full
-    PYTHONPATH=src python benchmarks/controller_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/controller_sweep.py --smoke --chaos
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import platform
@@ -45,7 +60,8 @@ import time
 import jax
 import numpy as np
 
-from repro.service import ServiceConfig, run_service
+from repro.core.des import ChaosConfig
+from repro.service import ServiceConfig, TickFaults, run_service
 from repro.service.driver import default_controllers
 from repro.workload.windows import drift_scenarios
 
@@ -67,6 +83,45 @@ FULL = dict(n_jobs=4000, nodes=100, n_segments=8,
 SMOKE = dict(n_jobs=1400, nodes=100, n_segments=7,
              window_jobs=200, stride_jobs=100)
 
+#: --chaos re-runs this scenario subset with the fault axis (the chaos
+#: oracle is C=3 times the lanes per tick; the full five-scenario sweep
+#: adds nothing the A/B needs).
+CHAOS_SCENARIOS = ("steady", "intensity_ramp")
+#: ticks the degrade-proof run poisons: forced budget exhaustion, NaN
+#: fault telemetry, and a dropped monitor window on distinct ticks.
+CHAOS_FAULT_TICKS = dict(exhaust_budget=(1,), nan_telemetry=(2,),
+                         drop_telemetry=(3,))
+#: study λ: one machine-second of expected lost work priced at 0.1
+#: wait-seconds. The per-window lost-work curve is noisy in k, so an
+#: aggressive λ makes the cost arg-best chase that noise (extra switches,
+#: each paying the one-tick actuation delay in BOTH wait and lost work);
+#: a light λ breaks plateau ties toward the low-lost member and at study
+#: scale strictly dominates fault-blind hysteresis on lost work at equal
+#: or better wait regret.
+CHAOS_RISK_LAMBDA = 0.1
+
+
+def chaos_axis() -> ChaosConfig:
+    """The 3-cell fault-regime axis: harsh (25 chip-hour MTBF, deadly
+    4x stragglers) / moderate (100) / calm (800, mild stragglers).
+    Cell 0 plays the true environment in the study."""
+    return ChaosConfig(mtbf_chip_hours=np.array([25.0, 100.0, 800.0]),
+                       ckpt_period=300.0, straggler_prob=0.1,
+                       straggler_factor=np.array([4.0, 1.5, 1.5]),
+                       seed=11)
+
+
+def _trim_ticks(out: dict) -> None:
+    """Keep only the per-tick fields the figures need (the full log is
+    bulky). Degraded ticks carry no oracle block — hence the ``in t``
+    guard — but keep their tick/window/degraded markers."""
+    out["ticks"] = [
+        {k: t[k] for k in ("tick", "window", "best_k", "best_wait",
+                           "plateau_k", "oracle_ms", "degraded") if k in t} |
+        {"controllers": {n: c["realized_k"]
+                         for n, c in t["controllers"].items()}}
+        for t in out["ticks"]]
+
 
 def run_study(smoke: bool, scenario_filter=None) -> dict:
     shape = SMOKE if smoke else FULL
@@ -87,13 +142,7 @@ def run_study(smoke: bool, scenario_filter=None) -> dict:
         out = run_service(wl, config, default_controllers(config))
         secs = time.perf_counter() - t0
         out["seconds"] = secs
-        # the full per-tick log is bulky; keep curves the figures need
-        out["ticks"] = [{k: t[k] for k in
-                         ("tick", "window", "best_k", "best_wait",
-                          "plateau_k", "oracle_ms")} |
-                        {"controllers": {n: c["realized_k"]
-                                         for n, c in t["controllers"].items()}}
-                        for t in out["ticks"]]
+        _trim_ticks(out)
         scenarios[name] = out
         ctl = out["controllers"]
         print(f"[{name}] {out['n_ticks']} ticks in {secs:.1f}s")
@@ -103,6 +152,85 @@ def run_study(smoke: bool, scenario_filter=None) -> dict:
                   f"mean_regret_useful={s['mean_regret_useful']:.5f} "
                   f"vs_plateau={s['mean_wait_vs_plateau']:+.2f}s")
     return {"shape": shape, "scenarios": scenarios}
+
+
+def run_chaos_study(smoke: bool) -> dict:
+    """The regret-under-faults block: fault-aware vs. fault-blind on the
+    chaos-axis service, plus the degrade-harness proof run."""
+    shape = SMOKE if smoke else FULL
+    flows = drift_scenarios(n_jobs=shape["n_jobs"], nodes=shape["nodes"],
+                            n_segments=shape["n_segments"])
+    config = ServiceConfig(window_jobs=shape["window_jobs"],
+                           stride_jobs=shape["stride_jobs"],
+                           chaos=chaos_axis(), chaos_env_cell=0,
+                           risk_lambda=CHAOS_RISK_LAMBDA)
+
+    scenarios = {}
+    for name in CHAOS_SCENARIOS:
+        t0 = time.perf_counter()
+        out = run_service(flows[name], config, default_controllers(config))
+        out["seconds"] = time.perf_counter() - t0
+        _trim_ticks(out)
+        scenarios[name] = out
+        print(f"[chaos/{name}] {out['n_ticks']} ticks "
+              f"in {out['seconds']:.1f}s")
+        for cname, s in out["controllers"].items():
+            print(f"    {cname:12s} switches={s['switches']:2d} "
+                  f"rel_regret_wait={s['rel_regret_wait']:.4f} "
+                  f"lost_work={s['total_lost_work']:.0f} machine-s")
+
+    # degrade-harness proof: the same steady trace with faults injected
+    # on three distinct ticks must still complete EVERY tick, with a
+    # health record per tick, exactly one of them degraded.
+    faults = TickFaults(**{k: frozenset(v)
+                           for k, v in CHAOS_FAULT_TICKS.items()})
+    proof_cfg = dataclasses.replace(config, on_budget_exhausted="degrade")
+    pout = run_service(flows["steady"], proof_cfg,
+                       default_controllers(proof_cfg), tick_faults=faults)
+    n_expected = scenarios["steady"]["n_ticks"]
+    proof = {
+        "injected": {k: sorted(v) for k, v in CHAOS_FAULT_TICKS.items()},
+        "n_ticks": pout["n_ticks"],
+        "n_expected_ticks": n_expected,
+        "n_degraded_ticks": pout["n_degraded_ticks"],
+        "health": pout["health"],
+        "completed_all_ticks": bool(
+            pout["n_ticks"] == n_expected
+            and len(pout["health"]) == pout["n_ticks"]
+            and pout["n_degraded_ticks"]
+            == len(CHAOS_FAULT_TICKS["exhaust_budget"])),
+    }
+    print(f"[chaos/degrade-proof] {pout['n_ticks']}/{n_expected} ticks, "
+          f"{pout['n_degraded_ticks']} degraded, "
+          f"completed_all_ticks={proof['completed_all_ticks']}")
+    return {"config": scenarios["steady"]["config"]["chaos"],
+            "scenarios": scenarios, "degrade_proof": proof}
+
+
+def evaluate_chaos_gates(block: dict) -> dict:
+    """The --chaos exit-code gates, also recorded in the JSON."""
+    scen = block["scenarios"]
+    names = list(next(iter(scen.values()))["controllers"])
+    lost = {c: sum(s["controllers"][c]["total_lost_work"]
+                   for s in scen.values()) for c in names}
+    regret = {c: sum(s["controllers"][c]["total_regret_wait"]
+                     for s in scen.values()) for c in names}
+    gates = {
+        "fault_aware_no_more_lost_work": bool(
+            lost["fault_aware"] <= lost["hysteresis"] + 1e-9),
+        "total_lost_work": lost,
+        "bounded_wait_regret": bool(
+            regret["fault_aware"]
+            <= regret["hysteresis"] * REGRET_SLACK + 1e-6),
+        "total_regret_wait": regret,
+        "degrade_completes_all_ticks": bool(
+            block["degrade_proof"]["completed_all_ticks"]),
+        "regret_slack": REGRET_SLACK,
+    }
+    gates["ok"] = bool(gates["fault_aware_no_more_lost_work"]
+                       and gates["bounded_wait_regret"]
+                       and gates["degrade_completes_all_ticks"])
+    return gates
 
 
 def evaluate_gates(study: dict) -> dict:
@@ -145,6 +273,9 @@ def main(argv=None) -> int:
         description="Streaming-controller regret study")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-scale traces; exit nonzero if a gate fails")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the regret-under-faults block (fault-aware "
+                         "vs. fault-blind + the degrade-harness proof)")
     ap.add_argument("--out", default=OUT_PATH,
                     help=f"output JSON path (default {OUT_PATH})")
     ap.add_argument("--scenarios", default=None,
@@ -167,6 +298,12 @@ def main(argv=None) -> int:
         "unix_time": time.time(),
         "total_seconds": time.perf_counter() - t0,
     }
+    chaos_gates = None
+    if args.chaos:
+        chaos_block = run_chaos_study(args.smoke)
+        chaos_gates = evaluate_chaos_gates(chaos_block)
+        out["chaos"] = {**chaos_block, "gates": chaos_gates}
+        out["total_seconds"] = time.perf_counter() - t0
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
@@ -174,7 +311,13 @@ def main(argv=None) -> int:
     for name, val in gates.items():
         if isinstance(val, bool) or name == "steady_rel_regret_ok":
             print(f"  gate {name}: {val}")
-    if args.smoke and not gates["ok"]:
+    if chaos_gates is not None:
+        for name, val in chaos_gates.items():
+            if isinstance(val, bool):
+                print(f"  gate chaos.{name}: {val}")
+    failed = not gates["ok"] or (chaos_gates is not None
+                                 and not chaos_gates["ok"])
+    if args.smoke and failed:
         print("SMOKE GATE FAILED")
         return 1
     return 0

@@ -372,6 +372,31 @@ def fig_controller_regret(ctl):
         r = scen["steady"]["controllers"]["hysteresis"]["rel_regret_wait"]
         check("controller-fig: zero-drift regret ~ 0", r <= 0.10,
               f"steady rel_regret_wait={r:.4f}")
+    chaos = ctl.get("chaos")
+    if chaos:    # regret-under-faults block (regen: controller_sweep --chaos)
+        cs = chaos["scenarios"]
+        lost = {c: sum(s["controllers"][c]["total_lost_work"]
+                       for s in cs.values())
+                for c in next(iter(cs.values()))["controllers"]}
+        regret = {c: sum(s["controllers"][c]["total_regret_wait"]
+                         for s in cs.values()) for c in lost}
+        check("controller-fig: fault-aware loses no more work than "
+              "fault-blind hysteresis",
+              lost["fault_aware"] <= lost["hysteresis"] + 1e-9,
+              " ".join(f"{c}:{v:.0f}" for c, v in lost.items()))
+        check("controller-fig: fault-aware wait regret within 1.1x of "
+              "fault-blind",
+              regret["fault_aware"] <= regret["hysteresis"] * 1.1 + 1e-6,
+              " ".join(f"{c}:{v:.0f}s" for c, v in regret.items()))
+        proof = chaos["degrade_proof"]
+        check("controller-fig: degrade-mode service completes every tick "
+              "under injected faults",
+              proof["completed_all_ticks"],
+              f"{proof['n_ticks']}/{proof['n_expected_ticks']} ticks, "
+              f"{proof['n_degraded_ticks']} degraded")
+        out["chaos"] = {"total_lost_work": lost,
+                        "total_regret_wait": regret,
+                        "degrade_proof_ok": proof["completed_all_ticks"]}
     return out
 
 
@@ -434,7 +459,8 @@ def main():
             (fig_scale_ratio_vs_faults, CHAOS_GRID_PATH,
              "PYTHONPATH=src python benchmarks/paper_sweep.py --chaos"),
             (fig_controller_regret, CONTROLLER_PATH,
-             "PYTHONPATH=src python benchmarks/controller_sweep.py")):
+             "PYTHONPATH=src python benchmarks/controller_sweep.py "
+             "--chaos")):
         artifact = _load_optional(path, hint)
         if artifact is not None:
             print(f"[run] {fig.__name__}: {fig.__doc__.splitlines()[0]}")

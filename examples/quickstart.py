@@ -47,5 +47,14 @@ print(f"\nadministrator recommendation: scale ratio k >= {thr.threshold} "
 #   PYTHONPATH=src python examples/streaming_controller.py
 #   PYTHONPATH=src python -m repro.launch.service --scenario intensity_step
 #
+# Fault-aware mode (`ServiceConfig(chaos=...)`) sweeps a ChaosConfig
+# fault-regime axis in the same per-tick program ([K, C] curves), a
+# regime estimator maps realized failure telemetry onto cell weights,
+# and `FaultAwareController` commits against wait + λ·lost-work instead
+# of wait alone; `on_budget_exhausted="degrade"` keeps the loop alive
+# through budget-exhausted windows (hold last-good k, health records).
+# The same example's second act and `--chaos` on the launcher run it.
+#
 # The regret study (controller vs hindsight oracles, per drift scenario)
-# is `benchmarks/controller_sweep.py` -> results/BENCH_controller.json.
+# is `benchmarks/controller_sweep.py` -> results/BENCH_controller.json;
+# `--chaos` adds the regret-under-faults block and its gates.

@@ -256,16 +256,22 @@ def _chaos_cell(chaos_lanes: ChaosConfig, i: int) -> ChaosConfig:
 _BUDGET_CELLS_SHOWN = 8    # exhausted cells named per message
 
 
-def _format_budget_cells(bad: np.ndarray, ks=None, s_props=None) -> str:
+def _format_budget_cells(bad: np.ndarray, ks=None, s_props=None,
+                         axis_names=None) -> str:
     """Name the exhausted grid cells: indices along the metric axes
     ((i_k, i_s[, i_chaos]) for a reshaped grid, a flat lane index
     otherwise) plus the actual k / s_prop values when the caller's axes
-    are known. Truncated after `_BUDGET_CELLS_SHOWN` entries."""
+    are known. `axis_names` overrides the default axis labels (the
+    window oracle's second axis is the chaos cell, not an init
+    proportion). Truncated after `_BUDGET_CELLS_SHOWN` entries."""
     if bad.ndim == 0:
         return "the single experiment"
     idx = np.argwhere(bad)
-    names = (("i_k", "i_s", "i_chaos")[:bad.ndim] if bad.ndim <= 3
-             else tuple(f"i{d}" for d in range(bad.ndim)))
+    if axis_names is not None:
+        names = tuple(axis_names)[:bad.ndim]
+    else:
+        names = (("i_k", "i_s", "i_chaos")[:bad.ndim] if bad.ndim <= 3
+                 else tuple(f"i{d}" for d in range(bad.ndim)))
     shown = []
     for cell in idx[:_BUDGET_CELLS_SHOWN]:
         cell = tuple(int(v) for v in cell)
@@ -282,7 +288,7 @@ def _format_budget_cells(bad: np.ndarray, ks=None, s_props=None) -> str:
 
 
 def _enforce_budget(metrics, policy: str, label: str,
-                    ks=None, s_props=None):
+                    ks=None, s_props=None, axis_names=None):
     """raise / warn / ignore when any lane hit its event budget.
 
     A truncated lane means its schedule (and every metric) stops early —
@@ -302,7 +308,8 @@ def _enforce_budget(metrics, policy: str, label: str,
     n_bad = int(bad.sum())
     if n_bad:
         msg = (f"{label}: {n_bad} lane(s) exhausted the event budget at "
-               f"[{_format_budget_cells(bad, ks, s_props)}] — schedules "
+               f"[{_format_budget_cells(bad, ks, s_props, axis_names)}] — "
+               f"schedules "
                f"are truncated; raise max_requeues/budget or pass "
                f"on_budget_exhausted='ignore' to keep them")
         if policy == "raise":
@@ -838,6 +845,7 @@ def run_window_oracle(pw: PackedWorkload,
                       ring: int | None = None,
                       mode: str = "auto",
                       chunk_lanes: int | None = None,
+                      chaos: ChaosConfig | None = None,
                       on_budget_exhausted: str = "raise") -> Metrics:
     """One control tick of the streaming service: all candidate scale
     ratios on a pre-packed workload window, as one batched lane program.
@@ -853,17 +861,33 @@ def run_window_oracle(pw: PackedWorkload,
     `_packet_one`): the lane program traces on the first tick and only
     dispatches afterwards.
 
+    `chaos` makes the tick fault-aware: a `ChaosConfig` whose fault
+    parameters carry a C-long chaos lane axis (`chaos_axis_len`) expands
+    the tick to one fused [K * C] lane program and the returned leaves to
+    ``[len(ks), C]`` — per candidate k, the wait / lost_work /
+    useful_util / requeued_jobs cells across every fault regime, from ONE
+    dispatch. Lane ids follow `chaos_lane_grid` grid order (k-major,
+    chaos-minor), exactly the ids `run_packet_grid(ks, s_props=[s],
+    chaos=...)` assigns, so the oracle's [K, C] block is bitwise the
+    grid driver's ``[:, 0, :]`` chaos column (tests/test_service.py pins
+    this in both dtypes). An inert config (zero failure and straggler
+    rates) is normalized to None and runs the exact fault-free program;
+    a scalar active config keeps [K] leaves (C == 1).
+
     Dtype follows the packed window (pack under `precision.dtype_scope`
     for float64); the sweep re-enters that scope here so a float64 service
     loop never leaks global x64 state. Modes as in `run_packet_grid`
-    minus the legacy vmap layouts ("auto" resolves over the K lanes of
-    this single tick).
+    minus the legacy vmap layouts ("auto" resolves over the K * C lanes
+    of this single tick).
     """
     dtype = np.dtype(pw.submit.dtype)
     K = len(ks)
     if K < 1:
         raise ValueError("run_window_oracle needs at least one candidate k")
-    resolved = resolve_mode(mode, K)
+    if chaos_is_inert(chaos):
+        chaos = None        # zero-rate config: run the exact pre-chaos trace
+    C = chaos_axis_len(chaos)
+    resolved = resolve_mode(mode, K * C)
     if resolved in ("vmap_k", "vmap_s"):
         raise ValueError(
             f"mode={resolved!r} is a grid layout; the window oracle has a "
@@ -871,19 +895,28 @@ def run_window_oracle(pw: PackedWorkload,
     with precision.dtype_scope(dtype):
         m_nodes = int(m_nodes)
         ring = resolve_ring(m_nodes, pw.n_jobs) if ring is None else int(ring)
-        k_lanes = jnp.asarray(ks, dtype)
-        s_lanes = jnp.full((K,), s_init, dtype)
+        chaos_l = (None if chaos is None
+                   else chaos_lane_grid(chaos, K, dtype)[0])
+        k_lanes = jnp.repeat(jnp.asarray(ks, dtype), C)
+        s_lanes = jnp.full((K * C,), s_init, dtype)
         if resolved == "seq":
-            cells = [_packet_one(pw, k_lanes[i], s_lanes[i], m_nodes, ring)
-                     for i in range(K)]
+            cells = [_packet_one(pw, k_lanes[i], s_lanes[i], m_nodes, ring,
+                                 None if chaos_l is None
+                                 else _chaos_cell(chaos_l, i))
+                     for i in range(K * C)]
             lanes = jax.tree.map(lambda *x: jnp.stack(x), *cells)
         elif resolved == "chunked":
             lanes = _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring,
-                                     max(1, int(chunk_lanes or CHUNK_LANES)))
+                                     max(1, int(chunk_lanes or CHUNK_LANES)),
+                                     chaos_l)
         else:                       # fused
-            lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring)
-        out = jax.tree.map(np.asarray, lanes)
-        _enforce_budget(out, on_budget_exhausted, "run_window_oracle", ks)
+            lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring,
+                                     chaos_l)
+        shape = (K,) if C == 1 else (K, C)
+        out = jax.tree.map(
+            lambda x: np.asarray(x).reshape(shape + x.shape[1:]), lanes)
+        _enforce_budget(out, on_budget_exhausted, "run_window_oracle", ks,
+                        axis_names=("i_k", "i_chaos"))
         return out
 
 

@@ -1,4 +1,5 @@
-"""Streaming Packet service: a closed-loop scale-ratio controller.
+"""Streaming Packet service: a closed-loop, fault-aware scale-ratio
+controller.
 
 The offline stack answers "which scale ratio k *was* best" after a full
 sweep; this package answers "which k *right now*" while jobs stream in.
@@ -11,27 +12,56 @@ the controller's inner oracle:
   runtime scale and dispersion (the homogeneity proxy), and the init
   time the paper's s parameter maps to for this window's runtime mix.
   The init time feeds the oracle; the smoothed signals and their deltas
-  are provenance that explains *why* the optimum moved.
+  are provenance that explains *why* the optimum moved. In fault-aware
+  mode a `FaultRegimeEstimator` additionally smooths the *realized*
+  fault telemetry (failures / requeues / lost work the committed k
+  actually saw) and maps it onto the oracle's chaos axis — a weight per
+  fault-regime cell, concentrated where the service actually lives.
+  Both monitors carry their EWMAs through NaN/Inf telemetry and raise a
+  named error only when there is no finite history to carry.
 
 * **decide** (`repro.service.controller`) — each tick, the oracle
   (`repro.core.sweep.run_window_oracle`) evaluates ALL candidate k's on
   the recent window as one batched lane program (the packed window keeps
   a fixed shape, so the program compiles once and only dispatches on
-  later ticks). `HysteresisController` commits the arg-best k with
-  plateau-aware hysteresis built on `plateau_threshold`'s tolerance
-  model: it holds the current k while it stays inside the new curve's 5%
-  plateau band and moves only when the optimum leaves it — the paper's
-  own observation (a wide flat plateau around k*) turned into a
-  stability rule. `NaiveController` commits the arg-best every tick and
-  exists as the A/B foil.
+  later ticks); with a `ChaosConfig` axis the same program also sweeps
+  every fault regime, returning [K, C] curves. `HysteresisController`
+  commits the arg-best k with plateau-aware hysteresis built on
+  `plateau_threshold`'s tolerance model: it holds the current k while it
+  stays inside the new curve's 5% plateau band and moves only when the
+  optimum leaves it — the paper's own observation (a wide flat plateau
+  around k*) turned into a stability rule. `FaultAwareController`
+  scalarizes the wait/lost-work frontier — cost(k) = E_w[wait] +
+  λ·E_w[lost] under the estimator's regime weights — and applies the
+  SAME hysteresis to the cost curve, so among near-tied plateau members
+  it leans toward the k that loses the least work. `NaiveController`
+  commits the arg-best every tick and exists as the A/B foil.
 
 * **actuate** (`repro.service.driver`) — `run_service` plays a trace
   window by window. The k committed at tick t-1 is what the service
   *realizes* on tick t's window (one-tick actuation delay, as a live
   scheduler would); per-tick provenance records the tuning curve, every
-  controller's decision, and regret vs. the window's hindsight optima.
-  Multiple controllers share one oracle call per tick, so A/Bs see
-  identical inputs by construction.
+  controller's decision, and regret vs. the window's hindsight optima
+  (in fault-aware mode, all realized metrics read the designated
+  environment cell of the chaos axis). Multiple controllers share one
+  oracle call per tick, so A/Bs see identical inputs by construction.
+
+**Degradation.** The service loop itself survives faults.
+``ServiceConfig(on_budget_exhausted="degrade")`` turns a budget-
+exhausted oracle window (real, or forced through the injectable
+`TickFaults` hook) from a mid-stream crash into a *degraded tick*: every
+controller holds its last-good k (the median candidate if the very
+first tick degrades), the tick is excluded from regret scoring, and the
+oracle simply retries at the next tick — bounded by
+``max_consecutive_degraded``, past which the loop raises with the tick
+index and window bounds. Each degrade-mode (or fault-injected) run
+returns per-tick ``health`` records — ``{tick, window, ok, degraded,
+cause, consecutive_degraded, ...}`` — plus a top-level
+``n_degraded_ticks``, so "the loop completed every tick" is checkable
+from the output alone. `TickFaults` can also drop a window's monitor
+telemetry (the EWMAs carry forward and the oracle runs on the smoothed
+init time) or poison the fault telemetry with NaN (the estimator
+carries forward); both are recorded in the health entries.
 
 Regret (avg_wait and useful_util) is measured against the per-tick
 hindsight arg-best — the realized k is always one of the oracle's
@@ -39,13 +69,19 @@ candidates, so regret is >= 0 by construction and == 0 only when the
 controller was already sitting on the optimum — and, signed, against the
 offline `plateau_threshold` recommendation applied per window.
 `benchmarks/controller_sweep.py` runs the drift-scenario study
-(`repro.workload.windows.drift_scenarios`) and gates on it in CI.
+(`repro.workload.windows.drift_scenarios`) and gates on it in CI;
+``--chaos`` adds the regret-under-faults block (fault-aware vs.
+fault-blind on lost work at bounded wait regret, plus the
+completes-under-injected-faults proof).
 """
-from repro.service.controller import (Decision, HysteresisController,
-                                      NaiveController)
-from repro.service.driver import ServiceConfig, run_service
-from repro.service.monitor import RollingMonitor, WindowSignals, window_signals
+from repro.service.controller import (Decision, FaultAwareController,
+                                      HysteresisController, NaiveController)
+from repro.service.driver import (ServiceConfig, TickFaults,
+                                  default_controllers, run_service)
+from repro.service.monitor import (FaultRegimeEstimator, RollingMonitor,
+                                   WindowSignals, window_signals)
 
-__all__ = ["Decision", "HysteresisController", "NaiveController",
-           "ServiceConfig", "run_service", "RollingMonitor", "WindowSignals",
-           "window_signals"]
+__all__ = ["Decision", "FaultAwareController", "HysteresisController",
+           "NaiveController", "ServiceConfig", "TickFaults",
+           "default_controllers", "run_service", "FaultRegimeEstimator",
+           "RollingMonitor", "WindowSignals", "window_signals"]

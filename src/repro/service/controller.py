@@ -11,6 +11,17 @@ wait stays within the plateau band of the new best, move (to the new
 arg-best) only when it leaves. `NaiveController` commits the arg-best
 unconditionally and is the A/B foil `benchmarks/controller_sweep.py`
 gates against (hysteresis must match its regret with fewer switches).
+
+`FaultAwareController` is the risk-aware variant for chaos-axis ticks:
+the oracle then returns [K, C] curves (per candidate k, per fault
+regime) and the fault-regime estimator a weight per cell. It scalarizes
+the wait/lost-work frontier — cost(k) = E_w[wait] + λ · E_w[lost] —
+and runs the SAME plateau-band hysteresis on the cost curve, so the
+plateau stability story survives going fault-aware: among near-tied
+plateau members the λ term breaks ties toward the k that loses the
+least work under the regime the service actually lives in. The
+fault-blind `HysteresisController` deciding on E_w[wait] alone is its
+A/B foil (`benchmarks/controller_sweep.py --chaos` gates the pair).
 """
 from __future__ import annotations
 
@@ -65,6 +76,15 @@ class HysteresisController:
 
     def decide(self, ks, avg_wait) -> Decision:
         ks, w = _validate_curve(ks, avg_wait)
+        return self._decide_on_curve(ks, w)
+
+    def _decide_on_curve(self, ks: np.ndarray, w: np.ndarray) -> Decision:
+        """Plateau-band hysteresis over a validated 1-D cost curve.
+
+        `decide` hands this the avg_wait curve; `FaultAwareController`
+        hands it the scalarized wait+λ·lost cost curve. The hold rule is
+        identical either way — that IS the refactor's point.
+        """
         i_best = int(np.argmin(w))
         best_k, best_w = float(ks[i_best]), float(w[i_best])
         plat = plateau_threshold(ks, w, rel_tol=self.rel_tol,
@@ -85,6 +105,80 @@ class HysteresisController:
         self.k = best_k
         return Decision(best_k, True, "left-plateau", best_k, best_w,
                         tol, plat.threshold)
+
+
+class FaultAwareController(HysteresisController):
+    """Plateau hysteresis on the risk-scalarized wait/lost-work frontier.
+
+    Chaos-axis decide: `avg_wait` and `lost` arrive as [K, C] curves
+    (candidate k × chaos cell, from `run_window_oracle(chaos=...)`) and
+    ``weights`` as the fault-regime estimator's [C] cell weights. The
+    controller scalarizes
+
+        cost(k) = Σ_c w_c · wait[k, c]  +  λ · Σ_c w_c · lost[k, c]
+
+    and applies the inherited plateau-band hysteresis to the cost curve:
+    hold the committed k while its cost stays inside the 5% plateau band
+    of the new cost-best, move only when it leaves. λ (``risk_lambda``)
+    prices one unit of expected lost work (the service driver feeds lost
+    work in machine-seconds, i.e. chip-seconds / M) in seconds of
+    average wait; λ=0 reduces exactly to the fault-blind
+    `HysteresisController` on the expected-wait curve (pinned in
+    tests/test_service.py).
+
+    [K] inputs (no chaos axis) and ``lost=None`` / ``weights=None``
+    (uniform cells, zero lost work) are accepted, so the controller
+    degrades gracefully to fault-blind behavior when the oracle has no
+    chaos axis to offer. Decision.best_wait then reports the *cost* at
+    the cost-best k — the quantity the hysteresis band was applied to —
+    not the raw wait (the driver records realized waits separately).
+    """
+
+    name = "fault_aware"
+    fault_aware = True      # the driver's dispatch marker (extra operands)
+
+    def __init__(self, rel_tol: float = 0.05, abs_tol: float | None = None,
+                 risk_lambda: float = 1.0):
+        super().__init__(rel_tol=rel_tol, abs_tol=abs_tol)
+        if risk_lambda < 0:
+            raise ValueError(
+                f"risk_lambda must be >= 0, got {risk_lambda}")
+        self.risk_lambda = float(risk_lambda)
+
+    @staticmethod
+    def _expect(name: str, curve, weights: np.ndarray | None) -> np.ndarray:
+        """[K] expectation of a [K] or [K, C] curve under the cell weights."""
+        arr = np.asarray(curve, np.float64)
+        if arr.ndim == 1:
+            return arr
+        if arr.ndim != 2:
+            raise ValueError(
+                f"decide() wants a [K] or [K, C] {name} curve, got shape "
+                f"{arr.shape}")
+        if weights is None:
+            return arr.mean(axis=1)
+        wts = np.asarray(weights, np.float64)
+        if wts.shape != (arr.shape[1],):
+            raise ValueError(
+                f"weights shape {wts.shape} does not match the {name} "
+                f"curve's chaos axis [{arr.shape[1]}]")
+        return arr @ wts
+
+    def decide(self, ks, avg_wait, lost=None, weights=None) -> Decision:
+        e_wait = self._expect("avg_wait", avg_wait, weights)
+        ks, e_wait = _validate_curve(ks, e_wait)
+        if lost is None:
+            cost = e_wait
+        else:
+            e_lost = self._expect("lost", lost, weights)
+            if e_lost.shape != e_wait.shape:
+                raise ValueError(
+                    f"lost curve reduces to shape {e_lost.shape}, "
+                    f"expected {e_wait.shape}")
+            if not np.all(np.isfinite(e_lost)):
+                raise ValueError("lost curve contains non-finite values")
+            cost = e_wait + self.risk_lambda * e_lost
+        return self._decide_on_curve(ks, cost)
 
 
 class NaiveController:

@@ -1,0 +1,502 @@
+"""Fault-aware streaming control: chaos oracle parity, regime estimation,
+risk-aware decide, and the degradation harness.
+
+Four layers, pinned bottom-up: (1) the chaos-axis window oracle is
+bitwise the offline grid driver's chaos column in BOTH dtypes — one
+tick's [K, C] curves are the same lanes `run_packet_grid` runs; (2) the
+fault-regime estimator is a deterministic function of its observations
+(EWMA math, weight concentration, NaN carry-forward) checked against
+hand arithmetic; (3) `FaultAwareController` at λ=0 IS the fault-blind
+hysteresis on the expected-wait curve, and at high λ leaves a near-tied
+wait plateau toward the low-lost member; (4) `run_service` under every
+`on_budget_exhausted` policy with forced-exhaustion / NaN-telemetry /
+dropped-telemetry `TickFaults` — "raise" names the tick and window,
+"warn" completes with a warning, "degrade" completes EVERY tick with
+health records and holds the last-good k.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import pack_workload
+from repro.core.des import ChaosConfig
+from repro.core.sweep import run_packet_grid, run_window_oracle
+from repro.service import (FaultAwareController, FaultRegimeEstimator,
+                           HysteresisController, ServiceConfig, TickFaults,
+                           default_controllers, run_service)
+from repro.service.monitor import RollingMonitor, window_signals
+from repro.workload.lublin import WorkloadParams, generate_workload
+from repro.workload.windows import drift_workload, slice_window
+
+KS = np.array([1.0, 2.0, 4.0, 8.0, 16.0])
+
+#: a 3-cell chaos axis: harsh / moderate / calm failure regimes, with the
+#: straggler factor exercising both deadline outcomes (kill at 4.0x)
+CHAOS3 = ChaosConfig(mtbf_chip_hours=np.array([25.0, 100.0, 800.0]),
+                     ckpt_period=300.0, straggler_prob=0.1,
+                     straggler_factor=np.array([4.0, 1.5, 1.5]), seed=7)
+
+#: Metrics fields the fault-aware decide and its provenance consume
+ORACLE_FIELDS = ("avg_wait", "lost_work", "useful_util", "requeued_jobs",
+                 "failures", "requeues", "straggler_kills", "ok")
+
+
+def _window(n_jobs=250, hi=200, seed=4):
+    wl = generate_workload(WorkloadParams(
+        n_jobs=n_jobs, nodes=100, load=0.9, homogeneous=True, seed=seed))
+    return slice_window(wl, 0, hi)
+
+
+class TestChaosWindowOracle:
+    @pytest.mark.parametrize("dtype", ["float32", "float64"])
+    def test_matches_offline_chaos_column_bitwise(self, dtype):
+        """One fault-aware tick == the offline chaos sweep on the same
+        window: same engine, same grid-order lane ids, so every leaf of
+        the oracle's [K, C] block equals run_packet_grid's [:, 0, :]
+        chaos column bit for bit — in both dtypes."""
+        dt = np.dtype(dtype)
+        win = _window()
+        ks, s_prop = (0.5, 2.0, 8.0, 40.0), 0.05
+        grid = run_packet_grid(win, ks=ks, s_props=[s_prop], dtype=dt,
+                               mode="chunked", chaos=CHAOS3)
+        from repro.core import precision
+        with precision.dtype_scope(dt):
+            pw = pack_workload(win, dt)
+        m = run_window_oracle(pw, ks, win.init_time_for_proportion(s_prop),
+                              win.params.nodes, mode="chunked", chaos=CHAOS3)
+        for f in ORACLE_FIELDS:
+            a = np.asarray(getattr(m, f))
+            b = np.asarray(getattr(grid, f))
+            assert a.shape == (len(ks), 3), f
+            assert np.array_equal(a, b[:, 0, :]), f
+
+    def test_dispatch_layouts_agree_bitwise(self):
+        """Grid-order lane ids make the chaos draws dispatch-invariant:
+        seq, chunked and fused ticks agree exactly."""
+        win = _window()
+        pw = pack_workload(win)
+        s = win.init_time_for_proportion(0.05)
+        outs = [run_window_oracle(pw, (0.5, 2.0, 8.0, 40.0), s,
+                                  win.params.nodes, mode=mode, chaos=CHAOS3)
+                for mode in ("seq", "chunked", "fused")]
+        for f in ORACLE_FIELDS:
+            ref = np.asarray(getattr(outs[0], f))
+            for other in outs[1:]:
+                assert np.array_equal(ref, np.asarray(getattr(other, f))), f
+
+    def test_inert_chaos_is_the_fault_free_program(self):
+        """A zero-rate ChaosConfig normalizes to None: [K] leaves,
+        bitwise the fault-free tick."""
+        win = _window()
+        pw = pack_workload(win)
+        s = win.init_time_for_proportion(0.05)
+        base = run_window_oracle(pw, KS, s, win.params.nodes, mode="chunked")
+        inert = run_window_oracle(pw, KS, s, win.params.nodes, mode="chunked",
+                                  chaos=ChaosConfig())
+        for f in ("avg_wait", "useful_util", "n_groups", "ok"):
+            a, b = np.asarray(getattr(base, f)), np.asarray(getattr(inert, f))
+            assert a.shape == (len(KS),), f
+            assert np.array_equal(a, b), f
+
+    def test_scalar_active_chaos_keeps_1d_leaves(self):
+        win = _window()
+        pw = pack_workload(win)
+        s = win.init_time_for_proportion(0.05)
+        m = run_window_oracle(pw, (2.0, 8.0), s, win.params.nodes,
+                              mode="chunked",
+                              chaos=ChaosConfig(mtbf_chip_hours=50.0))
+        assert np.asarray(m.avg_wait).shape == (2,)
+        assert np.asarray(m.failures).sum() > 0
+
+
+class TestRollingMonitorHardening:
+    def _sig(self, lo=0, hi=150, seed=2):
+        wl = generate_workload(WorkloadParams(
+            n_jobs=300, nodes=100, load=0.9, homogeneous=True, seed=seed))
+        return window_signals(slice_window(wl, lo, hi), 0.05)
+
+    def test_nan_carries_last_finite_ewma(self):
+        m = RollingMonitor(alpha=0.5)
+        sig = self._sig()
+        first = m.observe(sig)
+        poisoned = sig._replace(offered_load=float("nan"),
+                                init_time=float("inf"))
+        second = m.observe(poisoned)
+        assert second["ewm_offered_load"] == first["ewm_offered_load"]
+        assert second["ewm_init_time"] == first["ewm_init_time"]
+        assert second["delta_offered_load"] == 0.0
+        assert set(second["carried"]) == {"offered_load", "init_time"}
+        # finite components still smooth normally
+        assert second["ewm_arrival_rate"] == pytest.approx(
+            0.5 * sig.arrival_rate + 0.5 * first["ewm_arrival_rate"])
+        clean = m.observe(sig)
+        assert "carried" not in clean
+
+    def test_nan_at_bootstrap_raises_named(self):
+        m = RollingMonitor()
+        with pytest.raises(ValueError, match="offered_load"):
+            m.observe(self._sig()._replace(offered_load=float("nan")))
+
+    def test_reset_and_has_state(self):
+        m = RollingMonitor(alpha=0.5)
+        assert not m.has_state
+        sig = self._sig()
+        m.observe(sig)
+        assert m.has_state
+        m.reset()
+        assert not m.has_state
+        # post-reset observation bootstraps fresh (no smoothing with the
+        # pre-reset history)
+        out = m.observe(self._sig(150, 300))
+        assert out["delta_offered_load"] == 0.0
+
+
+class TestFaultRegimeEstimator:
+    def test_uniform_before_any_observation(self):
+        est = FaultRegimeEstimator()
+        w = est.weights({"failures": [10.0, 1.0, 0.1]})
+        assert w.shape == (3,)
+        np.testing.assert_allclose(w, [1 / 3] * 3)
+
+    def test_concentrates_on_matching_cell(self):
+        est = FaultRegimeEstimator(alpha=1.0, temperature=0.25)
+        est.observe(failures=10.0, requeues=12.0, lost_work=5000.0)
+        w = est.weights({"failures": np.array([10.0, 1.0, 0.0]),
+                         "requeues": np.array([12.0, 2.0, 0.0]),
+                         "lost_work": np.array([5000.0, 400.0, 0.0])})
+        assert int(np.argmax(w)) == 0
+        assert w[0] > 0.9                      # exact match, sharp temp
+        assert w[1] > w[2]                     # ordered by distance
+        assert w.sum() == pytest.approx(1.0)
+
+    def test_ewma_math_and_regime_shift(self):
+        est = FaultRegimeEstimator(alpha=0.5)
+        est.observe(10.0, 0.0, 0.0)
+        out = est.observe(20.0, 0.0, 0.0)
+        assert out["ewm_failures"] == pytest.approx(15.0)
+        # a regime shift moves the EWMA (and therefore the weights)
+        # toward the new cell within a few half-lives
+        cells = {"failures": np.array([0.5, 15.0, 40.0])}
+        assert int(np.argmax(est.weights(cells))) == 1
+        for _ in range(4):
+            est.observe(40.0, 0.0, 0.0)
+        assert int(np.argmax(est.weights(cells))) == 2
+
+    def test_temperature_sets_concentration(self):
+        cells = {"failures": np.array([10.0, 5.0, 0.0])}
+        sharp = FaultRegimeEstimator(temperature=0.01)
+        flat = FaultRegimeEstimator(temperature=100.0)
+        for est in (sharp, flat):
+            est.observe(10.0, 0.0, 0.0)
+        assert sharp.weights(cells)[0] > 0.999
+        np.testing.assert_allclose(flat.weights(cells), 1 / 3, atol=0.01)
+
+    def test_nan_telemetry_carries_forward(self):
+        est = FaultRegimeEstimator(alpha=0.5)
+        est.observe(10.0, 2.0, 100.0)
+        out = est.observe(float("nan"), float("inf"), 200.0)
+        assert set(out["carried"]) == {"failures", "requeues"}
+        assert out["ewm_failures"] == 10.0      # carried, not NaN-poisoned
+        assert out["ewm_lost_work"] == pytest.approx(150.0)
+        assert est.n_carried == 2
+        w = est.weights({"failures": np.array([10.0, 0.0])})
+        assert np.all(np.isfinite(w))
+
+    def test_never_observed_signal_degrades_to_uniform(self):
+        """A stream that was NaN from the start never observes anything:
+        weights stay at the uniform prior rather than propagating NaN."""
+        est = FaultRegimeEstimator()
+        out = est.observe(float("nan"), float("nan"), float("nan"))
+        assert len(out["carried"]) == 3 and "ewm_failures" not in out
+        np.testing.assert_allclose(est.weights(
+            {"failures": np.array([1.0, 2.0])}), [0.5, 0.5])
+
+    def test_mismatched_cells_raise_named(self):
+        est = FaultRegimeEstimator()
+        est.observe(1.0, 1.0, 1.0)
+        with pytest.raises(ValueError, match="failures"):
+            est.weights({"failures": np.array([1.0, 2.0]),
+                         "requeues": np.array([1.0, 2.0, 3.0])})
+        with pytest.raises(ValueError, match="non-empty"):
+            est.weights({})
+
+    def test_reset(self):
+        est = FaultRegimeEstimator()
+        est.observe(float("nan"), 1.0, 1.0)
+        assert est.has_state and est.n_carried == 1
+        est.reset()
+        assert not est.has_state and est.n_carried == 0
+        np.testing.assert_allclose(
+            est.weights({"failures": np.array([0.0, 9.0])}), [0.5, 0.5])
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultRegimeEstimator(alpha=0.0)
+        with pytest.raises(ValueError):
+            FaultRegimeEstimator(temperature=0.0)
+
+
+class TestFaultAwareDecide:
+    WAIT2 = np.array([[100.0, 110.0], [10.0, 11.0],
+                      [10.2, 11.2], [10.4, 11.4]])
+    LOST2 = np.array([[900.0, 1800.0], [40.0, 80.0],
+                      [20.0, 40.0], [1.0, 2.0]])
+    KS4 = np.array([1.0, 4.0, 8.0, 16.0])
+
+    def test_lambda_zero_is_fault_blind_on_expected_wait(self):
+        w = np.array([0.25, 0.75])
+        fa = FaultAwareController(risk_lambda=0.0)
+        fb = HysteresisController()
+        curves = (self.WAIT2, self.WAIT2[:, ::-1], self.WAIT2 * 1.5)
+        for c in curves:
+            assert (fa.decide(self.KS4, c, lost=self.LOST2, weights=w).k
+                    == fb.decide(self.KS4, c @ w).k)
+
+    def test_high_lambda_leaves_plateau_toward_low_lost(self):
+        """k=4 wins on wait alone (near-tied plateau with 8 and 16), but
+        the λ·lost term makes k=16 the cost arg-best."""
+        fb = HysteresisController()
+        w = np.array([0.5, 0.5])
+        assert fb.decide(self.KS4, self.WAIT2 @ w).k == 4.0
+        fa = FaultAwareController(risk_lambda=1.0)
+        d = fa.decide(self.KS4, self.WAIT2, lost=self.LOST2, weights=w)
+        assert d.k == 16.0 and d.reason == "bootstrap"
+        # ... and the hysteresis hold still applies on the cost curve
+        d2 = fa.decide(self.KS4, self.WAIT2 * 1.001, lost=self.LOST2,
+                       weights=w)
+        assert not d2.moved and d2.reason == "hold"
+
+    def test_weights_shift_the_expectation(self):
+        """Concentrating weight on the harsh cell doubles the lost term."""
+        fa = FaultAwareController(risk_lambda=0.2)
+        calm = fa.decide(self.KS4, self.WAIT2, lost=self.LOST2,
+                         weights=np.array([1.0, 0.0]))
+        fa2 = FaultAwareController(risk_lambda=0.2)
+        harsh = fa2.decide(self.KS4, self.WAIT2, lost=self.LOST2,
+                           weights=np.array([0.0, 1.0]))
+        assert harsh.best_wait > calm.best_wait   # cost at best, provenance
+
+    def test_1d_and_default_inputs_accepted(self):
+        fa = FaultAwareController()
+        d = fa.decide(KS, [100.0, 50.0, 10.0, 9.0, 10.0])
+        assert d.k == 8.0
+        fa2 = FaultAwareController()
+        # [K, C] wait with no weights: uniform cells
+        d2 = fa2.decide(self.KS4, self.WAIT2)
+        assert d2.k == 4.0
+
+    def test_validation(self):
+        fa = FaultAwareController()
+        with pytest.raises(ValueError):
+            fa.decide(self.KS4, self.WAIT2, weights=np.ones(3))
+        with pytest.raises(ValueError):
+            fa.decide(self.KS4, self.WAIT2[:, :, None])
+        with pytest.raises(ValueError, match="non-finite"):
+            fa.decide(self.KS4, self.WAIT2,
+                      lost=self.LOST2 * np.nan,
+                      weights=np.array([0.5, 0.5]))
+        with pytest.raises(ValueError):
+            FaultAwareController(risk_lambda=-0.5)
+
+
+class TestServiceConfigValidation:
+    """Bad configs must raise at construction, not deep inside tick N."""
+
+    BAD = [
+        dict(window_jobs=0),
+        dict(stride_jobs=0),
+        dict(s_prop=0.0),
+        dict(dtype="float16"),
+        dict(dtype="int32"),
+        dict(mode="vmap_k"),
+        dict(mode="warp"),
+        dict(rel_tol=-0.01),
+        dict(abs_tol=-1.0),
+        dict(ewm_alpha=0.0),
+        dict(ewm_alpha=1.5),
+        dict(on_budget_exhausted="explode"),
+        dict(risk_lambda=-1.0),
+        dict(fault_alpha=0.0),
+        dict(fault_temperature=0.0),
+        dict(max_consecutive_degraded=0),
+        dict(ks=()),
+        dict(chaos=CHAOS3, chaos_env_cell=3),
+        dict(chaos=CHAOS3, chaos_env_cell=-1),
+        dict(chaos=ChaosConfig()),      # inert axis
+    ]
+
+    @pytest.mark.parametrize("kw", BAD,
+                             ids=[str(sorted(b.items()))[:40] for b in BAD])
+    def test_bad_field_raises(self, kw):
+        with pytest.raises(ValueError):
+            ServiceConfig(**kw)
+
+    def test_good_configs_construct(self):
+        ServiceConfig()
+        cfg = ServiceConfig(chaos=CHAOS3, chaos_env_cell=2,
+                            on_budget_exhausted="degrade")
+        assert cfg.n_chaos_cells == 3
+
+    def test_tick_faults_validation(self):
+        tf = TickFaults(exhaust_budget=[2, 1], nan_telemetry={3})
+        assert tf.exhaust_budget == frozenset({1, 2})
+        with pytest.raises(ValueError):
+            TickFaults(exhaust_budget=[-1])
+        with pytest.raises(ValueError):
+            TickFaults(drop_telemetry="012")
+
+
+def _trace(n_jobs=800):
+    return drift_workload(
+        WorkloadParams(n_jobs=n_jobs, nodes=100, load=0.9, homogeneous=True,
+                       seed=9, daily_amplitude=0.3),
+        loads=[0.9] * 4)
+
+
+_SERVICE_KW = dict(ks=(0.5, 2.0, 8.0, 40.0), window_jobs=200, mode="chunked")
+
+
+class TestDegradeHarness:
+    def test_raise_policy_names_tick_and_window(self):
+        config = ServiceConfig(**_SERVICE_KW)
+        with pytest.raises(RuntimeError, match=r"tick 1 .*\[200, 400\)"):
+            run_service(_trace(), config,
+                        tick_faults=TickFaults(exhaust_budget={1}))
+
+    def test_warn_policy_completes_with_context(self):
+        config = ServiceConfig(on_budget_exhausted="warn", **_SERVICE_KW)
+        with pytest.warns(RuntimeWarning, match="tick 1"):
+            out = run_service(_trace(), config,
+                              tick_faults=TickFaults(exhaust_budget={1}))
+        assert out["n_ticks"] == 4
+        assert out["n_degraded_ticks"] == 0
+        assert out["health"][1]["budget_warned"]
+
+    def test_degrade_policy_completes_every_tick(self):
+        config = ServiceConfig(on_budget_exhausted="degrade", **_SERVICE_KW)
+        out = run_service(_trace(), config,
+                          tick_faults=TickFaults(exhaust_budget={1}))
+        assert out["n_ticks"] == 4
+        assert out["n_degraded_ticks"] == 1
+        assert [h["tick"] for h in out["health"]] == [0, 1, 2, 3]
+        bad = out["ticks"][1]
+        assert bad["degraded"] and "best_k" not in bad
+        for name, c in bad["controllers"].items():
+            # held exactly the k committed at tick 0 — the last-good k
+            assert c["reason"] == "degraded-hold"
+            assert (c["realized_k"]
+                    == out["ticks"][0]["controllers"][name]["committed_k"])
+        # degraded ticks are excluded from regret scoring
+        for s in out["controllers"].values():
+            assert s["n_ticks"] == 3
+            assert len(s["k_trajectory"]) == 4    # but the k history is full
+            assert s["mean_regret_wait"] >= -1e-12
+
+    def test_degraded_bootstrap_uses_median_candidate(self):
+        config = ServiceConfig(on_budget_exhausted="degrade", **_SERVICE_KW)
+        out = run_service(_trace(), config,
+                          tick_faults=TickFaults(exhaust_budget={0}))
+        t0 = out["ticks"][0]
+        for c in t0["controllers"].values():
+            assert c["reason"] == "degraded-bootstrap"
+            assert c["realized_k"] == 8.0       # median of (0.5, 2, 8, 40)
+
+    def test_bounded_retry_raises_past_consecutive_limit(self):
+        config = ServiceConfig(on_budget_exhausted="degrade",
+                               max_consecutive_degraded=1, **_SERVICE_KW)
+        with pytest.raises(RuntimeError, match="consecutive degraded"):
+            run_service(_trace(), config,
+                        tick_faults=TickFaults(exhaust_budget={1, 2}))
+        # non-consecutive faults stay within the bound
+        out = run_service(_trace(), config,
+                          tick_faults=TickFaults(exhaust_budget={1, 3}))
+        assert out["n_degraded_ticks"] == 2
+
+    def test_degrade_without_faults_matches_default_numerics(self):
+        """The degrade machinery must not perturb a healthy stream: same
+        curves, same decisions, same regrets — only the health records
+        are new."""
+        base = run_service(_trace(), ServiceConfig(**_SERVICE_KW))
+        deg = run_service(_trace(), ServiceConfig(
+            on_budget_exhausted="degrade", **_SERVICE_KW))
+        assert deg["n_degraded_ticks"] == 0
+        for name in base["controllers"]:
+            b, d = base["controllers"][name], deg["controllers"][name]
+            assert b["k_trajectory"] == d["k_trajectory"]
+            assert b["total_regret_wait"] == d["total_regret_wait"]
+            assert b["switches"] == d["switches"]
+        assert base["oracle"]["best_k"] == deg["oracle"]["best_k"]
+        assert "health" not in base and "health" in deg
+
+    def test_default_output_schema_unchanged(self):
+        out = run_service(_trace(), ServiceConfig(**_SERVICE_KW))
+        assert sorted(out) == ["config", "controllers", "n_ticks", "oracle",
+                               "ticks"]
+        assert "on_budget_exhausted" not in out["config"]
+        assert "chaos" not in out["config"]
+
+
+class TestFaultAwareService:
+    @pytest.fixture(scope="class")
+    def result(self):
+        config = ServiceConfig(chaos=CHAOS3, chaos_env_cell=0,
+                               risk_lambda=1.0, **_SERVICE_KW)
+        return run_service(_trace(), config, default_controllers(config))
+
+    def test_controller_set_and_invariants(self, result):
+        assert set(result["controllers"]) == {"fault_aware", "hysteresis",
+                                              "naive"}
+        for name, s in result["controllers"].items():
+            assert s["mean_regret_wait"] >= -1e-12, name
+            assert s["mean_regret_useful"] >= -1e-12, name
+            assert s["total_lost_work"] >= 0.0, name
+
+    def test_weights_are_distributions(self, result):
+        for t in result["ticks"]:
+            for c in t["controllers"].values():
+                w = np.asarray(c["weights"])
+                assert w.shape == (3,)
+                assert np.all(w >= 0) and w.sum() == pytest.approx(1.0)
+
+    def test_estimator_locks_onto_environment_cell(self, result):
+        """After a few closed-loop ticks the realized harsh-cell telemetry
+        concentrates every controller's regime weights on env cell 0."""
+        last = result["ticks"][-1]
+        for name, c in last["controllers"].items():
+            assert int(np.argmax(c["weights"])) == 0, name
+
+    def test_fault_aware_no_worse_on_lost_work(self, result):
+        fa = result["controllers"]["fault_aware"]
+        fb = result["controllers"]["hysteresis"]
+        assert fa["total_lost_work"] <= fb["total_lost_work"] + 1e-9
+        assert (fa["total_regret_wait"]
+                <= 1.1 * fb["total_regret_wait"] + 1e-6)
+
+    def test_chaos_provenance_recorded(self, result):
+        chaos = result["config"]["chaos"]
+        assert chaos["n_cells"] == 3 and chaos["env_cell"] == 0
+        assert chaos["mtbf_chip_hours"] == [25.0, 100.0, 800.0]
+        t1 = result["ticks"][1]["controllers"]["fault_aware"]
+        assert "ewm_failures" in t1["fault_ewm"]
+        assert t1["realized_lost"] >= 0.0
+
+    def test_nan_and_dropped_telemetry_survive_with_chaos(self):
+        config = ServiceConfig(chaos=CHAOS3, on_budget_exhausted="degrade",
+                               **_SERVICE_KW)
+        out = run_service(
+            _trace(), config,
+            tick_faults=TickFaults(nan_telemetry={1}, drop_telemetry={2},
+                                   exhaust_budget={3}))
+        assert out["n_ticks"] == 4 and out["n_degraded_ticks"] == 1
+        t1 = out["ticks"][1]["controllers"]["fault_aware"]
+        assert t1["carried_telemetry"] == ["failures", "requeues",
+                                           "lost_work"]
+        assert out["health"][2]["dropped_telemetry"]
+        assert "carried" in out["ticks"][2]["signals"]
+        # every post-fault weight vector is still a finite distribution
+        for t in out["ticks"]:
+            for c in t["controllers"].values():
+                if "weights" in c:
+                    assert np.all(np.isfinite(c["weights"]))
