@@ -169,6 +169,82 @@ def per_device_hbm(cfg: ModelConfig, shape: Shape, strategy: str,
     return act + cache
 
 
+# ------------------------------------------------- DES event-step model
+
+def event_step_cost(n_jobs: int, n_types: int, ring: int,
+                    dtype_bytes: int = 4, chaos: bool = False) -> dict:
+    """Analytic bytes/event and flops/event for the fused DES event step.
+
+    Models one lane-column of `repro.kernels.packet_step` (equivalently
+    one `packet_scan_step` trip): the per-event working set is the
+    23-column scan state — 12 scalars, 5 [H] per-type rows, 6 [ring]
+    group-ring rows — read and written once per event, plus the workload
+    gathers (prefix-sum rows at head/tail per type, the submit-time and
+    job-type picks) that cannot stay resident because they index into
+    [N]-sized arrays. Float work is a handful of elementwise ops per
+    type row (`packet.queue_weights`) and per-event group math; with
+    chaos, the outcome draw plus the fixed-trip `_credit_cut` binary
+    search (ceil(log2(N+1)) gathers of one element each). Constants are
+    deliberately coarse — the point of the model is the *ratio*: tens of
+    bytes moved per float op puts the step deep in the memory-bound
+    regime, which is the quantitative argument for keeping the ring
+    state kernel-resident (VMEM) rather than bouncing it through HBM
+    every `lax.scan` trip.
+    """
+    H, R = int(n_types), int(ring)
+    state_elems = 12 + 5 * H + 6 * R
+    state_bytes = 2 * state_elems * dtype_bytes          # read + write
+    # prefw[tail] + prefw[head] per type row, submit/jtype/t_sub picks
+    gathers = 2 * H + 6
+    if chaos:
+        gathers += max(int(n_jobs + 1).bit_length(), 1)  # _credit_cut
+        gathers += 8                # uniforms, pool decode, remnant walk
+    gather_bytes = gathers * dtype_bytes
+    flops = 14 * H + 48 + (64 if chaos else 0)
+    return {
+        "n_jobs": int(n_jobs), "n_types": H, "ring": R,
+        "dtype_bytes": int(dtype_bytes), "chaos": bool(chaos),
+        "state_bytes_per_event": state_bytes,
+        "gather_bytes_per_event": gather_bytes,
+        "bytes_per_event": state_bytes + gather_bytes,
+        "flops_per_event": flops,
+    }
+
+
+def event_step_roofline(n_jobs: int, n_types: int, ring: int,
+                        n_lanes: int = 1, dtype_bytes: int = 4,
+                        chaos: bool = False,
+                        budget: int | None = None) -> dict:
+    """Predicted ceiling for one DES experiment on the reference device.
+
+    Applies the §Roofline terms to `event_step_cost`: a lane pays
+    ``budget`` (~3N) events, each bounded below by max(bytes/HBM_BW,
+    flops/PEAK_FLOPS) with the byte traffic amortized over the `n_lanes`
+    lanes of one dispatch (the flop term never binds — the step is
+    hundreds of bytes per ~100 flops). ``predicted_ms_per_experiment``
+    is what an HBM-resident scan step costs at the device's streaming
+    bandwidth; a kernel that keeps the state columns VMEM-resident pays
+    only the gather traffic, so the gap between the two predictions
+    (``state_resident_ms_per_experiment``) is the headroom the Pallas
+    event-step kernel chases. BENCH_des records both next to the
+    measured engines.
+    """
+    cost = event_step_cost(n_jobs, n_types, ring, dtype_bytes, chaos)
+    ev = int(budget) if budget is not None else 3 * int(n_jobs)
+    lanes = max(1, int(n_lanes))
+    mem_s = ev * cost["bytes_per_event"] / HBM_BW
+    flop_s = ev * cost["flops_per_event"] / PEAK_FLOPS
+    resident_s = ev * cost["gather_bytes_per_event"] / HBM_BW
+    return {
+        **cost,
+        "events_per_lane": ev, "n_lanes": lanes,
+        "bound": "memory" if mem_s >= flop_s else "compute",
+        "predicted_ms_per_experiment": max(mem_s, flop_s) * 1e3,
+        "state_resident_ms_per_experiment": max(resident_s, flop_s) * 1e3,
+        "peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+    }
+
+
 # --------------------------------------------------------------- terms
 
 @dataclasses.dataclass

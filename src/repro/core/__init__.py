@@ -4,12 +4,13 @@ simulation plus the pure policy functions reused by the ML-cluster layer."""
 from repro.core import packet, precision
 from repro.core.cohort import (CohortKey, WorkloadCohort, cohort_key,
                                group_workloads, stack_workloads)
-from repro.core.des import (ChaosConfig, DesResult, PackedWorkload,
-                            chaos_is_inert, chaos_uniforms, event_budget,
-                            pack_workload, resolve_max_requeues,
-                            resolve_ring, simulate_packet,
-                            simulate_packet_host,
-                            simulate_packet_reference, simulate_packet_scan)
+from repro.core.des import (STEP_IMPLS, ChaosConfig, DesResult,
+                            PackedWorkload, chaos_is_inert, chaos_uniforms,
+                            event_budget, pack_workload, packet_scan_step,
+                            resolve_max_requeues, resolve_ring,
+                            simulate_packet, simulate_packet_host,
+                            simulate_packet_reference, simulate_packet_scan,
+                            simulate_packet_scan_lanes)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.core.sweep import (CHAOS_AXIS_FIELDS, PAPER_INIT_PROPS,
@@ -24,10 +25,10 @@ __all__ = [
     "packet", "precision", "CohortKey", "WorkloadCohort", "cohort_key",
     "group_workloads", "stack_workloads", "ChaosConfig", "DesResult",
     "PackedWorkload", "chaos_is_inert", "chaos_uniforms", "event_budget",
-    "pack_workload",
+    "pack_workload", "packet_scan_step", "STEP_IMPLS",
     "resolve_max_requeues", "resolve_ring", "simulate_packet",
     "simulate_packet_host", "simulate_packet_reference",
-    "simulate_packet_scan", "Metrics",
+    "simulate_packet_scan", "simulate_packet_scan_lanes", "Metrics",
     "efficiency_metrics", "simulate_backfill", "simulate_fcfs",
     "CHAOS_AXIS_FIELDS", "PAPER_INIT_PROPS", "PAPER_SCALE_RATIOS",
     "PlateauResult",

@@ -905,11 +905,235 @@ class _ScanState(NamedTuple):
     requeued_jobs: jnp.ndarray
 
 
+#: the recognized per-event step implementations of the scan engine
+STEP_IMPLS = ("xla", "pallas")
+
+
+def _check_step_impl(step_impl: str) -> str:
+    if step_impl not in STEP_IMPLS:
+        raise ValueError(f"unknown step_impl {step_impl!r}; "
+                         f"available: {STEP_IMPLS}")
+    return step_impl
+
+
+def packet_scan_step(pw: PackedWorkload, k, s_j, p_j, tmax_j,
+                     st: _ScanState, *, r_cap: int = 0, chaos=None,
+                     u_all=None):
+    """ONE fused event step of the scan engine — the canonical semantics.
+
+    Branchlessly either forms one group (greedy pass unblocked) or consumes
+    one event (submission / group finish), with every state write masked by
+    `do_sched` / `do_event`. This module-level form is shared by BOTH step
+    implementations of `simulate_packet_scan`: the XLA engine scans it
+    directly, and `repro.kernels.packet_step` re-exports it as the pure-jnp
+    reference (`ref.py`) that the lane-batched Pallas kernel body mirrors —
+    one source of truth for the event arithmetic, so the engines cannot
+    drift apart silently.
+
+    Args mirror `simulate_packet_scan`'s internals: `s_j`/`p_j`/`tmax_j`
+    are the [H] per-type init/priority/wait-normalizer rows, `r_cap` the
+    static requeue-injection budget R, and `u_all` the [N + R, 2] per-lane
+    uniform stream (required iff `chaos` is given). Returns
+    ``(new_state, (log_key, log_t, log_m, log_headw))``.
+    """
+    H, N = pw.n_types, pw.n_jobs
+    dtype = st.t.dtype
+    t_end_metric = pw.t_last_submit
+    type_ids = jnp.arange(H)
+    key_pad = jnp.iinfo(jnp.int32).max
+    zero_f = jnp.zeros((), dtype)
+    zero_i = jnp.zeros((), jnp.int32)
+    one_i = jnp.ones((), jnp.int32)
+    R = r_cap
+
+    nonempty = st.tail > st.head
+    if chaos is not None:
+        nonempty = nonempty | (st.pool_code > 0)
+    free_mask = jnp.isinf(st.grp_end)
+    queued = jnp.any(nonempty)
+    active = ((st.next_sub < N) | jnp.any(~jnp.isinf(st.grp_end)) |
+              jnp.any(st.tail > st.head))
+    if chaos is not None:
+        active = active | jnp.any(st.pool_code > 0)
+    can_sched = (st.m_free > 0) & queued & jnp.any(free_mask)
+    do_sched = active & can_sched
+    do_event = active & ~can_sched
+
+    # greedy scheduling pass (paper Steps 1-5), masked unless do_sched
+    sum_w = (pw.tj_prefw[type_ids, st.tail] -
+             pw.tj_prefw[type_ids, st.head])
+    oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
+    if chaos is not None:
+        sum_w = sum_w + st.pool_w
+        oldest = jnp.minimum(oldest, st.pool_oldest)
+    w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j,
+                             nonempty)
+    j = jnp.argmax(w).astype(jnp.int32)
+    work = sum_w[j]
+    m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)
+    dur = packet.group_duration(work, s_j[j], m_grp)
+    sslot = jnp.argmax(free_mask)
+    head_w = pw.tj_prefw[j, st.head[j]]
+    if chaos is None:
+        t_gfin = st.t + dur
+        useful_end = t_gfin
+    else:
+        L_cap = u_all.shape[0]
+        gslot = jnp.minimum(st.n_groups, L_cap - 1)
+        out = _chaos_outcome(chaos, u_all[gslot, 0], u_all[gslot, 1],
+                             st.requeues < R, s_j[j], work, m_grp, dur,
+                             dtype)
+        t_gfin = st.t + out.dur
+        useful_end = jnp.where(out.failed,
+                               st.t + s_j[j] + out.ckpt_done, t_gfin)
+        requeued = do_sched & (out.failed | out.killed)
+        # stash the requeue span + credit for the finish event — see
+        # simulate_packet for the deferred-walk notes
+        eps = jnp.asarray(CREDIT_EPS, dtype)
+        p_cnt, p_lo, p_frag = _pool_decode(st.pool_code[j], N)
+        has_pool = p_cnt > 0
+        qlo = jnp.where(has_pool, p_lo, st.head[j])
+        res0 = jnp.where(has_pool, jnp.maximum(
+            head_w - pw.tj_prefw[j, qlo] - st.pool_w[j], zero_f),
+            zero_f)
+        walk_ok = ~(has_pool & p_frag)
+        avail = res0 + out.credit
+        span_code = 1 + qlo * (N + 1) + st.tail[j]
+        rem_agg = work - out.credit
+        a_has = requeued & (rem_agg > eps)
+        a_cnt = (st.tail[j] - st.head[j]) + p_cnt
+        code = jnp.where(requeued & walk_ok, span_code,
+                         jnp.where(a_has, -a_cnt, zero_i))
+        stash_w = jnp.where(
+            requeued & walk_ok, avail,
+            jnp.where(a_has, jnp.maximum(rem_agg, zero_f), zero_f))
+        stash_old = jnp.where(a_has & ~walk_ok, oldest[j], INF)
+    busy_inc = m_grp.astype(dtype) * _window_overlap(
+        st.t, t_gfin, t_end_metric)
+    useful_inc = m_grp.astype(dtype) * _window_overlap(
+        st.t + s_j[j], useful_end, t_end_metric)
+    if chaos is not None:
+        # same best-effort rounding contract as the while engine
+        busy_inc, useful_inc = jax.lax.optimization_barrier(
+            (busy_inc, useful_inc))
+
+    # event step (submission or completion), masked unless do_event
+    t_sub = jnp.where(st.next_sub < N,
+                      pw.submit[jnp.minimum(st.next_sub, N - 1)], INF)
+    eslot = jnp.argmin(st.grp_end)
+    t_efin = st.grp_end[eslot]
+    take_sub = t_sub <= t_efin
+    t_new = jnp.where(take_sub, t_sub, t_efin)
+    qlen = jnp.sum(st.tail - st.head).astype(dtype)
+    if chaos is not None:
+        qlen = qlen + jnp.sum(st.pool_code % (N + 1)).astype(dtype)
+    q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
+    if chaos is not None:
+        q_inc = jax.lax.optimization_barrier(q_inc)
+    sub_j = pw.jtype[jnp.minimum(st.next_sub, N - 1)]
+
+    do_submit = do_event & take_sub
+    do_finish = do_event & ~take_sub
+
+    head = st.head.at[j].set(jnp.where(do_sched, st.tail[j], st.head[j]))
+    tail = st.tail.at[sub_j].add(jnp.where(do_submit, one_i, zero_i))
+    m_free = (st.m_free - jnp.where(do_sched, m_grp, zero_i)
+              + jnp.where(do_finish, st.grp_m[eslot], zero_i))
+    grp_end = st.grp_end.at[sslot].set(
+        jnp.where(do_sched, t_gfin, st.grp_end[sslot]))
+    grp_end = grp_end.at[eslot].set(
+        jnp.where(do_finish, INF, grp_end[eslot]))
+    grp_m = st.grp_m.at[sslot].set(
+        jnp.where(do_sched, m_grp, st.grp_m[sslot]))
+    grp_m = grp_m.at[eslot].set(
+        jnp.where(do_finish, zero_i, grp_m[eslot]))
+
+    y = (jnp.where(do_sched, j * (N + 1) + st.tail[j], key_pad),
+         jnp.where(do_sched, st.t, zero_f),
+         jnp.where(do_sched, m_grp, zero_i),
+         jnp.where(do_sched, head_w, zero_f))
+
+    if chaos is None:
+        chaos_upd = {}
+    else:
+        # formation clears the drained pool and stashes the requeue in
+        # the ring; the finish event resolves the stash into its member
+        # set (_resolve_remnant) and releases it back to the pool
+        j_f = st.grp_jtype[eslot]
+        cnt_r, rem_w_r, rem_old_r, rem_lo_r, rem_hi_r, walk_r = (
+            _resolve_remnant(pw, j_f, st.grp_rem_cnt[eslot],
+                             st.grp_rem_w[eslot],
+                             st.grp_rem_oldest[eslot], dtype))
+        old_cnt, old_lo, old_frag = _pool_decode(st.pool_code[j_f], N)
+        inc = do_finish & (cnt_r > 0)
+        was_empty = old_cnt == 0
+        contig = rem_hi_r == st.head[j_f]
+        frag = jnp.where(
+            inc, old_frag | ~walk_r | ~was_empty | ~contig, old_frag)
+        new_lo = jnp.where(was_empty, rem_lo_r,
+                           jnp.minimum(old_lo, rem_lo_r))
+        new_code = ((new_lo * 2 + frag.astype(jnp.int32))
+                    * (N + 1) + old_cnt + cnt_r)
+        pool_w = st.pool_w.at[j].set(
+            jnp.where(do_sched, zero_f, st.pool_w[j]))
+        pool_w = pool_w.at[j_f].add(
+            jnp.where(do_finish, rem_w_r, zero_f))
+        pool_oldest = st.pool_oldest.at[j].set(
+            jnp.where(do_sched, INF, st.pool_oldest[j]))
+        pool_oldest = pool_oldest.at[j_f].min(
+            jnp.where(do_finish, rem_old_r, INF))
+        pool_code = st.pool_code.at[j].set(
+            jnp.where(do_sched, zero_i, st.pool_code[j]))
+        pool_code = pool_code.at[j_f].set(
+            jnp.where(inc, new_code, pool_code[j_f]))
+        grp_rem_w = st.grp_rem_w.at[sslot].set(
+            jnp.where(do_sched, stash_w, st.grp_rem_w[sslot]))
+        grp_rem_w = grp_rem_w.at[eslot].set(
+            jnp.where(do_finish, zero_f, grp_rem_w[eslot]))
+        grp_rem_cnt = st.grp_rem_cnt.at[sslot].set(
+            jnp.where(do_sched, code, st.grp_rem_cnt[sslot]))
+        grp_rem_cnt = grp_rem_cnt.at[eslot].set(
+            jnp.where(do_finish, zero_i, grp_rem_cnt[eslot]))
+        grp_rem_oldest = st.grp_rem_oldest.at[sslot].set(
+            jnp.where(do_sched, stash_old, st.grp_rem_oldest[sslot]))
+        grp_rem_oldest = grp_rem_oldest.at[eslot].set(
+            jnp.where(do_finish, INF, grp_rem_oldest[eslot]))
+        chaos_upd = dict(
+            pool_w=pool_w, pool_oldest=pool_oldest,
+            pool_code=pool_code,
+            grp_jtype=st.grp_jtype.at[sslot].set(
+                jnp.where(do_sched, j, st.grp_jtype[sslot])),
+            grp_rem_w=grp_rem_w, grp_rem_cnt=grp_rem_cnt,
+            grp_rem_oldest=grp_rem_oldest,
+            lost_work=st.lost_work + jnp.where(do_sched, out.lost,
+                                               zero_f),
+            failures=st.failures + jnp.where(do_sched & out.failed,
+                                             one_i, zero_i),
+            straggler_kills=st.straggler_kills + jnp.where(
+                do_sched & out.killed & ~out.failed, one_i, zero_i),
+            requeues=st.requeues + jnp.where(requeued, one_i, zero_i),
+            requeued_jobs=st.requeued_jobs + jnp.where(
+                do_finish, cnt_r, zero_i))
+
+    st = st._replace(
+        t=jnp.where(do_event, t_new, st.t),
+        next_sub=st.next_sub + jnp.where(do_submit, one_i, zero_i),
+        head=head, tail=tail, m_free=m_free,
+        grp_end=grp_end, grp_m=grp_m,
+        qlen_int=st.qlen_int + jnp.where(do_event, q_inc, zero_f),
+        busy_ns=st.busy_ns + jnp.where(do_sched, busy_inc, zero_f),
+        useful_ns=st.useful_ns + jnp.where(do_sched, useful_inc, zero_f),
+        n_groups=st.n_groups + jnp.where(do_sched, one_i, zero_i),
+        **chaos_upd)
+    return st, y
+
+
 def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
                          priority=None, t_max=None, ring: int | None = None,
                          budget: int | None = None,
                          seg: int | None = None,
-                         chaos: ChaosConfig | None = None) -> DesResult:
+                         chaos: ChaosConfig | None = None,
+                         step_impl: str = "xla") -> DesResult:
     """Packet DES as a fixed-budget `lax.scan` — the batched-lane engine.
 
     Same policy and same per-step arithmetic as `simulate_packet`, but
@@ -946,7 +1170,37 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
     equivalence suite pins every DesResult field); `ok` is False only if
     the budget was insufficient, which the 3N bound rules out for the
     default.
+
+    Engine selection (`step_impl`):
+
+      * ``"xla"`` (default, and the only engine on CPU worth running
+        compiled): the per-event step scans `packet_scan_step` directly
+        and lanes batch via `vmap`. This stays the default everywhere —
+        zero behaviour change for existing callers.
+      * ``"pallas"``: the same event arithmetic as a lane-minor Pallas
+        kernel (`repro.kernels.packet_step`) with the ring state resident
+        in kernel memory across the gather/scatter chain, invoked once
+        per event for a whole dispatch of lanes. Wins on accelerators
+        where XLA would bounce the [lanes, ring] state through HBM
+        between the small fused ops of the step; on CPU it runs in
+        interpret mode (discharged back into XLA), so it is a
+        correctness/parity path there, not a fast path. Schedules and
+        integer counters are bitwise-identical to ``"xla"`` in both
+        dtypes, chaos on and off (pinned by tests/test_packet_step.py);
+        float time-integrals may differ in final ulps, same as every
+        cross-engine contract in this module.
+
+    A single (k, s) pair routed through ``"pallas"`` runs as a 1-lane
+    dispatch of `simulate_packet_scan_lanes`; batch callers should use
+    the lanes entry point directly.
     """
+    _check_step_impl(step_impl)
+    if step_impl == "pallas":
+        res = simulate_packet_scan_lanes(
+            pw, jnp.asarray(k)[None], jnp.asarray(s_init)[None], m_nodes,
+            priority=priority, t_max=t_max, ring=ring, budget=budget,
+            seg=seg, chaos=chaos, step_impl="pallas")
+        return jax.tree.map(lambda x: x[0], res)
     H, N = pw.n_types, pw.n_jobs
     ring = resolve_ring(m_nodes, N, ring)
     R = resolve_max_requeues(chaos, N)
@@ -964,12 +1218,7 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
     tmax_j = (jnp.full((H,), 3600.0, dtype) if t_max is None
               else jnp.asarray(t_max, dtype))
 
-    t_end_metric = pw.t_last_submit
-    type_ids = jnp.arange(H)
     key_pad = jnp.iinfo(jnp.int32).max
-    zero_f = jnp.zeros((), dtype)
-    zero_i = jnp.zeros((), jnp.int32)
-    one_i = jnp.ones((), jnp.int32)
     u_all = None if chaos is None else chaos_uniforms(chaos, dtype, L_cap)
 
     def lane_active(st: _ScanState):
@@ -980,182 +1229,8 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
         return active
 
     def step(st: _ScanState, _):
-        nonempty = st.tail > st.head
-        if chaos is not None:
-            nonempty = nonempty | (st.pool_code > 0)
-        free_mask = jnp.isinf(st.grp_end)
-        queued = jnp.any(nonempty)
-        active = lane_active(st)
-        can_sched = (st.m_free > 0) & queued & jnp.any(free_mask)
-        do_sched = active & can_sched
-        do_event = active & ~can_sched
-
-        # greedy scheduling pass (paper Steps 1-5), masked unless do_sched
-        sum_w = (pw.tj_prefw[type_ids, st.tail] -
-                 pw.tj_prefw[type_ids, st.head])
-        oldest = pw.tj_submit[type_ids, jnp.minimum(st.head, N - 1)]
-        if chaos is not None:
-            sum_w = sum_w + st.pool_w
-            oldest = jnp.minimum(oldest, st.pool_oldest)
-        w = packet.queue_weights(sum_w, s_j, p_j, oldest, st.t, tmax_j,
-                                 nonempty)
-        j = jnp.argmax(w).astype(jnp.int32)
-        work = sum_w[j]
-        m_grp = packet.group_nodes(work, k, s_j[j], st.m_free)
-        dur = packet.group_duration(work, s_j[j], m_grp)
-        sslot = jnp.argmax(free_mask)
-        head_w = pw.tj_prefw[j, st.head[j]]
-        if chaos is None:
-            t_gfin = st.t + dur
-            useful_end = t_gfin
-        else:
-            gslot = jnp.minimum(st.n_groups, L_cap - 1)
-            out = _chaos_outcome(chaos, u_all[gslot, 0], u_all[gslot, 1],
-                                 st.requeues < R, s_j[j], work, m_grp, dur,
-                                 dtype)
-            t_gfin = st.t + out.dur
-            useful_end = jnp.where(out.failed,
-                                   st.t + s_j[j] + out.ckpt_done, t_gfin)
-            requeued = do_sched & (out.failed | out.killed)
-            # stash the requeue span + credit for the finish event — see
-            # simulate_packet for the deferred-walk notes
-            eps = jnp.asarray(CREDIT_EPS, dtype)
-            p_cnt, p_lo, p_frag = _pool_decode(st.pool_code[j], N)
-            has_pool = p_cnt > 0
-            qlo = jnp.where(has_pool, p_lo, st.head[j])
-            res0 = jnp.where(has_pool, jnp.maximum(
-                head_w - pw.tj_prefw[j, qlo] - st.pool_w[j], zero_f),
-                zero_f)
-            walk_ok = ~(has_pool & p_frag)
-            avail = res0 + out.credit
-            span_code = 1 + qlo * (N + 1) + st.tail[j]
-            rem_agg = work - out.credit
-            a_has = requeued & (rem_agg > eps)
-            a_cnt = (st.tail[j] - st.head[j]) + p_cnt
-            code = jnp.where(requeued & walk_ok, span_code,
-                             jnp.where(a_has, -a_cnt, zero_i))
-            stash_w = jnp.where(
-                requeued & walk_ok, avail,
-                jnp.where(a_has, jnp.maximum(rem_agg, zero_f), zero_f))
-            stash_old = jnp.where(a_has & ~walk_ok, oldest[j], INF)
-        busy_inc = m_grp.astype(dtype) * _window_overlap(
-            st.t, t_gfin, t_end_metric)
-        useful_inc = m_grp.astype(dtype) * _window_overlap(
-            st.t + s_j[j], useful_end, t_end_metric)
-        if chaos is not None:
-            # same best-effort rounding contract as the while engine
-            busy_inc, useful_inc = jax.lax.optimization_barrier(
-                (busy_inc, useful_inc))
-
-        # event step (submission or completion), masked unless do_event
-        t_sub = jnp.where(st.next_sub < N,
-                          pw.submit[jnp.minimum(st.next_sub, N - 1)], INF)
-        eslot = jnp.argmin(st.grp_end)
-        t_efin = st.grp_end[eslot]
-        take_sub = t_sub <= t_efin
-        t_new = jnp.where(take_sub, t_sub, t_efin)
-        qlen = jnp.sum(st.tail - st.head).astype(dtype)
-        if chaos is not None:
-            qlen = qlen + jnp.sum(st.pool_code % (N + 1)).astype(dtype)
-        q_inc = qlen * _window_overlap(st.t, t_new, t_end_metric)
-        if chaos is not None:
-            q_inc = jax.lax.optimization_barrier(q_inc)
-        sub_j = pw.jtype[jnp.minimum(st.next_sub, N - 1)]
-
-        do_submit = do_event & take_sub
-        do_finish = do_event & ~take_sub
-
-        head = st.head.at[j].set(jnp.where(do_sched, st.tail[j], st.head[j]))
-        tail = st.tail.at[sub_j].add(jnp.where(do_submit, one_i, zero_i))
-        m_free = (st.m_free - jnp.where(do_sched, m_grp, zero_i)
-                  + jnp.where(do_finish, st.grp_m[eslot], zero_i))
-        grp_end = st.grp_end.at[sslot].set(
-            jnp.where(do_sched, t_gfin, st.grp_end[sslot]))
-        grp_end = grp_end.at[eslot].set(
-            jnp.where(do_finish, INF, grp_end[eslot]))
-        grp_m = st.grp_m.at[sslot].set(
-            jnp.where(do_sched, m_grp, st.grp_m[sslot]))
-        grp_m = grp_m.at[eslot].set(
-            jnp.where(do_finish, zero_i, grp_m[eslot]))
-
-        y = (jnp.where(do_sched, j * (N + 1) + st.tail[j], key_pad),
-             jnp.where(do_sched, st.t, zero_f),
-             jnp.where(do_sched, m_grp, zero_i),
-             jnp.where(do_sched, head_w, zero_f))
-
-        if chaos is None:
-            chaos_upd = {}
-        else:
-            # formation clears the drained pool and stashes the requeue in
-            # the ring; the finish event resolves the stash into its member
-            # set (_resolve_remnant) and releases it back to the pool
-            j_f = st.grp_jtype[eslot]
-            cnt_r, rem_w_r, rem_old_r, rem_lo_r, rem_hi_r, walk_r = (
-                _resolve_remnant(pw, j_f, st.grp_rem_cnt[eslot],
-                                 st.grp_rem_w[eslot],
-                                 st.grp_rem_oldest[eslot], dtype))
-            old_cnt, old_lo, old_frag = _pool_decode(st.pool_code[j_f], N)
-            inc = do_finish & (cnt_r > 0)
-            was_empty = old_cnt == 0
-            contig = rem_hi_r == st.head[j_f]
-            frag = jnp.where(
-                inc, old_frag | ~walk_r | ~was_empty | ~contig, old_frag)
-            new_lo = jnp.where(was_empty, rem_lo_r,
-                               jnp.minimum(old_lo, rem_lo_r))
-            new_code = ((new_lo * 2 + frag.astype(jnp.int32))
-                        * (N + 1) + old_cnt + cnt_r)
-            pool_w = st.pool_w.at[j].set(
-                jnp.where(do_sched, zero_f, st.pool_w[j]))
-            pool_w = pool_w.at[j_f].add(
-                jnp.where(do_finish, rem_w_r, zero_f))
-            pool_oldest = st.pool_oldest.at[j].set(
-                jnp.where(do_sched, INF, st.pool_oldest[j]))
-            pool_oldest = pool_oldest.at[j_f].min(
-                jnp.where(do_finish, rem_old_r, INF))
-            pool_code = st.pool_code.at[j].set(
-                jnp.where(do_sched, zero_i, st.pool_code[j]))
-            pool_code = pool_code.at[j_f].set(
-                jnp.where(inc, new_code, pool_code[j_f]))
-            grp_rem_w = st.grp_rem_w.at[sslot].set(
-                jnp.where(do_sched, stash_w, st.grp_rem_w[sslot]))
-            grp_rem_w = grp_rem_w.at[eslot].set(
-                jnp.where(do_finish, zero_f, grp_rem_w[eslot]))
-            grp_rem_cnt = st.grp_rem_cnt.at[sslot].set(
-                jnp.where(do_sched, code, st.grp_rem_cnt[sslot]))
-            grp_rem_cnt = grp_rem_cnt.at[eslot].set(
-                jnp.where(do_finish, zero_i, grp_rem_cnt[eslot]))
-            grp_rem_oldest = st.grp_rem_oldest.at[sslot].set(
-                jnp.where(do_sched, stash_old, st.grp_rem_oldest[sslot]))
-            grp_rem_oldest = grp_rem_oldest.at[eslot].set(
-                jnp.where(do_finish, INF, grp_rem_oldest[eslot]))
-            chaos_upd = dict(
-                pool_w=pool_w, pool_oldest=pool_oldest,
-                pool_code=pool_code,
-                grp_jtype=st.grp_jtype.at[sslot].set(
-                    jnp.where(do_sched, j, st.grp_jtype[sslot])),
-                grp_rem_w=grp_rem_w, grp_rem_cnt=grp_rem_cnt,
-                grp_rem_oldest=grp_rem_oldest,
-                lost_work=st.lost_work + jnp.where(do_sched, out.lost,
-                                                   zero_f),
-                failures=st.failures + jnp.where(do_sched & out.failed,
-                                                 one_i, zero_i),
-                straggler_kills=st.straggler_kills + jnp.where(
-                    do_sched & out.killed & ~out.failed, one_i, zero_i),
-                requeues=st.requeues + jnp.where(requeued, one_i, zero_i),
-                requeued_jobs=st.requeued_jobs + jnp.where(
-                    do_finish, cnt_r, zero_i))
-
-        st = st._replace(
-            t=jnp.where(do_event, t_new, st.t),
-            next_sub=st.next_sub + jnp.where(do_submit, one_i, zero_i),
-            head=head, tail=tail, m_free=m_free,
-            grp_end=grp_end, grp_m=grp_m,
-            qlen_int=st.qlen_int + jnp.where(do_event, q_inc, zero_f),
-            busy_ns=st.busy_ns + jnp.where(do_sched, busy_inc, zero_f),
-            useful_ns=st.useful_ns + jnp.where(do_sched, useful_inc, zero_f),
-            n_groups=st.n_groups + jnp.where(do_sched, one_i, zero_i),
-            **chaos_upd)
-        return st, y
+        return packet_scan_step(pw, k, s_j, p_j, tmax_j, st,
+                                r_cap=R, chaos=chaos, u_all=u_all)
 
     def seg_cond(carry):
         st, _, s_idx = carry
@@ -1209,6 +1284,193 @@ def simulate_packet_scan(pw: PackedWorkload, k, s_init, m_nodes,
                      lost_work=st.lost_work, failures=st.failures,
                      straggler_kills=st.straggler_kills,
                      requeues=st.requeues, requeued_jobs=st.requeued_jobs)
+
+
+def _lane_cols_to_rows(cols: _ScanState) -> _ScanState:
+    """Kernel layout [state, T] -> lane-major [T, state] for assembly."""
+    return _ScanState(
+        t=cols.t[0], next_sub=cols.next_sub[0],
+        head=cols.head.T, tail=cols.tail.T, m_free=cols.m_free[0],
+        grp_end=cols.grp_end.T, grp_m=cols.grp_m.T,
+        qlen_int=cols.qlen_int[0], busy_ns=cols.busy_ns[0],
+        useful_ns=cols.useful_ns[0], n_groups=cols.n_groups[0],
+        pool_w=cols.pool_w.T, pool_oldest=cols.pool_oldest.T,
+        pool_code=cols.pool_code.T, grp_jtype=cols.grp_jtype.T,
+        grp_rem_w=cols.grp_rem_w.T, grp_rem_cnt=cols.grp_rem_cnt.T,
+        grp_rem_oldest=cols.grp_rem_oldest.T,
+        lost_work=cols.lost_work[0], failures=cols.failures[0],
+        straggler_kills=cols.straggler_kills[0], requeues=cols.requeues[0],
+        requeued_jobs=cols.requeued_jobs[0])
+
+
+def simulate_packet_scan_lanes(pw: PackedWorkload, k, s_init, m_nodes,
+                               priority=None, t_max=None,
+                               ring: int | None = None,
+                               budget: int | None = None,
+                               seg: int | None = None,
+                               chaos: ChaosConfig | None = None,
+                               step_impl: str = "xla") -> DesResult:
+    """A whole dispatch of (k, s) lanes through one scan engine.
+
+    `k` and `s_init` are [T] lane arrays; `chaos` (optional) carries
+    scalar or [T] leaves (broadcast here). Returns a DesResult whose
+    every field has a leading lane axis — the same contract as vmapping
+    `simulate_packet_scan`, which is exactly what ``step_impl="xla"``
+    does.
+
+    ``step_impl="pallas"`` instead keeps the lanes TOGETHER in one
+    kernel invocation per event: state lives as [state, T] columns with
+    lanes on the minor axis, and each scan step calls the fused
+    `repro.kernels.packet_step` kernel, which advances every lane one
+    event with the ring state resident in kernel memory (VMEM on TPU;
+    interpret mode discharges it back into XLA on CPU). The event
+    arithmetic is `packet_scan_step` vectorized over the lane axis —
+    all per-lane reductions are argmax/argmin/any over the state axis
+    and every float op is elementwise, so schedules and integer
+    counters are bitwise-identical to the XLA path. Extra budget
+    segments past a lane's drain point remain masked no-ops, so a
+    lane's result is independent of its dispatch companions (the
+    segmented early exit stops only when ALL lanes have drained).
+
+    Call under `jax.jit` — the pallas path issues one kernel call per
+    scan step and is built to be traced, not run op-by-op.
+    """
+    _check_step_impl(step_impl)
+    k = jnp.atleast_1d(k)
+    s_init = jnp.atleast_1d(s_init)
+    T = k.shape[0]
+    if step_impl == "xla":
+        run = partial(simulate_packet_scan, pw,
+                      m_nodes=m_nodes, priority=priority,
+                      t_max=t_max, ring=ring, budget=budget,
+                      seg=seg)
+        if chaos is None:
+            return jax.vmap(lambda kk, ss: run(k=kk, s_init=ss))(k, s_init)
+        chaos_b = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x), (T,)), chaos)
+        return jax.vmap(
+            lambda kk, ss, ch: run(k=kk, s_init=ss, chaos=ch))(
+                k, s_init, chaos_b)
+
+    from repro.kernels.packet_step import ops as _step_ops  # lazy: cycle
+
+    H, N = pw.n_types, pw.n_jobs
+    ring = resolve_ring(m_nodes, N, ring)
+    R = resolve_max_requeues(chaos, N)
+    L_cap = N + R
+    budget = event_budget(N, R) if budget is None else max(1, int(budget))
+    seg = SCAN_SEG if seg is None else max(1, int(seg))
+    n_segs = -(-budget // seg)
+    budget = n_segs * seg
+    dtype = precision.canonical_dtype(pw.submit.dtype)
+    k = jnp.asarray(k, dtype)
+    s = jnp.asarray(s_init, dtype)
+    m_nodes = jnp.asarray(m_nodes, jnp.int32)
+    p_j = (jnp.ones((H,), dtype) if priority is None
+           else jnp.asarray(priority, dtype))
+    tmax_j = (jnp.full((H,), 3600.0, dtype) if t_max is None
+              else jnp.asarray(t_max, dtype))
+    key_pad = jnp.iinfo(jnp.int32).max
+
+    if chaos is None:
+        u1 = u2 = chaos_params = None
+    else:
+        chaos_b = jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.asarray(x), (T,)), chaos)
+        u = jax.vmap(
+            lambda c: chaos_uniforms(c, dtype, L_cap))(chaos_b)
+        u1 = jnp.transpose(u[:, :, 0])          # [L_cap, T]
+        u2 = jnp.transpose(u[:, :, 1])
+        chaos_params = tuple(
+            jnp.broadcast_to(jnp.asarray(x, dtype), (1, T))
+            for x in (chaos.mtbf_chip_hours, chaos.ckpt_period,
+                      chaos.straggler_prob, chaos.straggler_factor,
+                      chaos.straggler_deadline))
+
+    k_col = k[None, :]
+    s_col = s[None, :]
+    t_last = jnp.reshape(pw.t_last_submit, (1, 1))
+
+    def lane_act(cols: _ScanState):
+        act = ((cols.next_sub[0] < N) |
+               jnp.any(~jnp.isinf(cols.grp_end), axis=0) |
+               jnp.any(cols.tail > cols.head, axis=0))
+        if chaos is not None:
+            act = act | jnp.any(cols.pool_code > 0, axis=0)
+        return act
+
+    def step(cols: _ScanState, _):
+        return _step_ops.fused_packet_step(
+            pw.tj_prefw, pw.tj_submit, pw.submit, pw.jtype,
+            k_col, s_col, p_j, tmax_j, t_last, cols,
+            u1=u1, u2=u2, chaos_params=chaos_params, r_cap=R)
+
+    def seg_cond(carry):
+        cols, _, s_idx = carry
+        return jnp.any(lane_act(cols)) & (s_idx < n_segs)
+
+    def seg_body(carry):
+        cols, logs, s_idx = carry
+        cols, ys = jax.lax.scan(step, cols, None, length=seg)
+        off = s_idx * seg
+        logs = tuple(
+            jax.lax.dynamic_update_slice(buf, y[:, 0, :],
+                                         (off, jnp.zeros_like(off)))
+            for buf, y in zip(logs, ys))
+        return cols, logs, s_idx + 1
+
+    cols0 = _ScanState(
+        t=jnp.zeros((1, T), dtype),
+        next_sub=jnp.zeros((1, T), jnp.int32),
+        head=jnp.zeros((H, T), jnp.int32),
+        tail=jnp.zeros((H, T), jnp.int32),
+        m_free=jnp.full((1, T), m_nodes, jnp.int32),
+        grp_end=jnp.full((ring, T), INF, dtype),
+        grp_m=jnp.zeros((ring, T), jnp.int32),
+        qlen_int=jnp.zeros((1, T), dtype),
+        busy_ns=jnp.zeros((1, T), dtype),
+        useful_ns=jnp.zeros((1, T), dtype),
+        n_groups=jnp.zeros((1, T), jnp.int32),
+        pool_w=jnp.zeros((H, T), dtype),
+        pool_oldest=jnp.full((H, T), INF, dtype),
+        pool_code=jnp.zeros((H, T), jnp.int32),
+        grp_jtype=jnp.zeros((ring, T), jnp.int32),
+        grp_rem_w=jnp.zeros((ring, T), dtype),
+        grp_rem_cnt=jnp.zeros((ring, T), jnp.int32),
+        grp_rem_oldest=jnp.full((ring, T), INF, dtype),
+        lost_work=jnp.zeros((1, T), dtype),
+        failures=jnp.zeros((1, T), jnp.int32),
+        straggler_kills=jnp.zeros((1, T), jnp.int32),
+        requeues=jnp.zeros((1, T), jnp.int32),
+        requeued_jobs=jnp.zeros((1, T), jnp.int32))
+    logs0 = (jnp.full((budget, T), key_pad, jnp.int32),
+             jnp.zeros((budget, T), dtype),
+             jnp.zeros((budget, T), jnp.int32),
+             jnp.zeros((budget, T), dtype))
+
+    cols, logs, _ = jax.lax.while_loop(
+        seg_cond, seg_body, (cols0, logs0, jnp.zeros((), jnp.int32)))
+    logs_lane = tuple(jnp.swapaxes(buf, 0, 1) for buf in logs)
+    st_lane = _lane_cols_to_rows(cols)
+
+    def assemble(lane_logs, st: _ScanState, s_lane):
+        s_row = jnp.full((H,), s_lane, dtype)
+        start_t, run_start_t = _reconstruct_job_times(pw, *lane_logs, s_row)
+        drained = ((st.next_sub >= N) & jnp.all(jnp.isinf(st.grp_end)) &
+                   jnp.all(st.head == st.tail))
+        if chaos is not None:
+            drained = drained & jnp.all(st.pool_code == 0)
+        ok = drained & jnp.all(jnp.isfinite(start_t))
+        return DesResult(start_t=start_t, run_start_t=run_start_t,
+                         qlen_int=st.qlen_int, busy_ns=st.busy_ns,
+                         useful_ns=st.useful_ns, n_groups=st.n_groups,
+                         makespan=st.t, ok=ok, budget_exhausted=~drained,
+                         lost_work=st.lost_work, failures=st.failures,
+                         straggler_kills=st.straggler_kills,
+                         requeues=st.requeues,
+                         requeued_jobs=st.requeued_jobs)
+
+    return jax.vmap(assemble)(logs_lane, st_lane, s)
 
 
 # --------------------------------------------------------------------------

@@ -78,10 +78,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import precision
-from repro.core.des import (ChaosConfig, PackedWorkload, chaos_is_inert,
-                            event_budget, pack_workload,
-                            resolve_max_requeues, resolve_ring,
-                            simulate_packet, simulate_packet_scan)
+from repro.core.des import (STEP_IMPLS, ChaosConfig, PackedWorkload,
+                            _check_step_impl, chaos_is_inert, event_budget,
+                            pack_workload, resolve_max_requeues,
+                            resolve_ring, simulate_packet,
+                            simulate_packet_scan, simulate_packet_scan_lanes)
 from repro.core.metrics import Metrics, efficiency_metrics
 from repro.core.schedulers import simulate_backfill, simulate_fcfs
 from repro.workload.lublin import Workload
@@ -120,8 +121,8 @@ def _one_experiment_scan(pw, k, s, m_nodes, ring, chaos=None):
     return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
 
 
-@partial(jax.jit, static_argnames=("m_nodes", "ring"))
-def _packet_one(pw, k, s, m_nodes, ring, chaos=None):
+@partial(jax.jit, static_argnames=("m_nodes", "ring", "step_impl"))
+def _packet_one(pw, k, s, m_nodes, ring, chaos=None, step_impl="xla"):
     """Single experiment (the per-dispatch path of mode='seq').
 
     Without chaos this is the while-loop engine, bitwise-identical to every
@@ -134,19 +135,41 @@ def _packet_one(pw, k, s, m_nodes, ring, chaos=None):
     dtype (observed: 1-2 ulp in qlen_int). Cross-engine chaos agreement
     is still enforced, engine-level, by tests/test_chaos.py: schedules
     and counters exact, float accumulates allclose (tight in float64).
+
+    ``step_impl="pallas"`` always routes through the scan engine (the
+    kernel is a scan-step implementation), chaos or not — so a pallas
+    "seq" sweep A/Bs engine-level against the batched layouts, while the
+    XLA default keeps the historical while-engine fast path.
     """
+    if step_impl == "pallas":
+        res = simulate_packet_scan(pw, k, s, m_nodes, ring=ring,
+                                   chaos=chaos, step_impl="pallas")
+        return efficiency_metrics(pw.submit, res, m_nodes, pw.t_last_submit)
     if chaos is None:
         return _one_experiment(pw, k, s, m_nodes, ring)
     return _one_experiment_scan(pw, k, s, m_nodes, ring, chaos)
 
 
-@partial(jax.jit, static_argnames=("m_nodes", "ring"))
-def _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
+@partial(jax.jit, static_argnames=("m_nodes", "ring", "step_impl"))
+def _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None,
+                  step_impl="xla"):
     """Batched lanes through the event-budget scan engine (chunked/fused).
 
     `chaos` is either None (the pre-chaos trace) or a ChaosConfig whose
     leaves are [L]-aligned with the lane axis (ChaosConfig's static aux —
-    seed, max_requeues — keys the jit cache via the treedef)."""
+    seed, max_requeues — keys the jit cache via the treedef).
+
+    ``step_impl="pallas"`` runs the same lanes through the fused
+    event-step kernel (`des.simulate_packet_scan_lanes`) instead of the
+    vmapped XLA step — one kernel invocation advances the whole dispatch
+    one event, with bitwise-identical schedules and counters."""
+    if step_impl == "pallas":
+        res = simulate_packet_scan_lanes(pw, k_lanes, s_lanes, m_nodes,
+                                         ring=ring, chaos=chaos,
+                                         step_impl="pallas")
+        return jax.vmap(
+            lambda r: efficiency_metrics(pw.submit, r, m_nodes,
+                                         pw.t_last_submit))(res)
     if chaos is None:
         return jax.vmap(_one_experiment_scan,
                         in_axes=(None, 0, 0, None, None))(
@@ -366,7 +389,8 @@ def lane_sharding(n_lanes: int, pad: bool = False):
     return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("lane"))
 
 
-def resolve_mode(mode: str, n_lanes: int, n_workloads: int = 1) -> str:
+def resolve_mode(mode: str, n_lanes: int, n_workloads: int = 1,
+                 step_impl: str = "xla") -> str:
     """Resolve mode='auto' to the concrete dispatch layout; validate others.
 
     Measured heuristics (benchmarks/results/BENCH_des.json, single CPU
@@ -383,10 +407,21 @@ def resolve_mode(mode: str, n_lanes: int, n_workloads: int = 1) -> str:
 
     Any explicit mode must be one of SWEEP_MODES; unknown strings raise
     instead of silently falling through to a default layout.
+
+    `step_impl` (validated here so every driver rejects typos up front) is
+    ORTHOGONAL to the layout: seq/chunked/fused describe how lanes are
+    grouped into dispatches, the step implementation ("xla" | "pallas")
+    describes what executes one event inside each dispatch. The legacy
+    vmap_k/vmap_s layouts predate the engine knob and stay XLA-only.
     """
+    _check_step_impl(step_impl)
     if mode not in SWEEP_MODES:
         raise ValueError(
             f"unknown sweep mode {mode!r}; available: {SWEEP_MODES}")
+    if step_impl == "pallas" and mode in ("vmap_k", "vmap_s"):
+        raise ValueError(
+            f"mode {mode!r} is a legacy XLA-only layout; the pallas step "
+            f"runs under 'seq', 'chunked' or 'fused'")
     if mode != "auto":
         return mode
     total = n_lanes * max(1, int(n_workloads))
@@ -396,7 +431,8 @@ def resolve_mode(mode: str, n_lanes: int, n_workloads: int = 1) -> str:
 
 
 def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1,
-               chaos: ChaosConfig | None = None) -> dict:
+               chaos: ChaosConfig | None = None,
+               step_impl: str = "xla") -> dict:
     """The resolve_mode decision plus its inputs, for benchmark provenance.
 
     `benchmarks/paper_sweep.py` persists this next to the metrics so a
@@ -406,17 +442,24 @@ def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1,
     then reports the stacked [W, lanes] layout `run_cohort_grid` executes.
     A `chaos` config multiplies the lane axis by its fault-parameter length
     C and records the fault grid (seed, requeue bound, parameter values)
-    so a chaos sweep's provenance pins the exact draws.
+    so a chaos sweep's provenance pins the exact draws. `step_impl`
+    records which event-step engine runs inside each dispatch
+    ("xla" | "pallas"); `step_interpret` flags a pallas run discharged
+    through interpret mode (CPU backend) — a parity run, not a perf run,
+    which is why bench_des skips its regression ratio gate.
     """
     if chaos_is_inert(chaos):
         chaos = None        # mirror the run_* drivers' normalization
     C = chaos_axis_len(chaos)
     n_lanes = int(n_lanes) * C
-    resolved = resolve_mode(mode, n_lanes, n_workloads)
+    resolved = resolve_mode(mode, n_lanes, n_workloads, step_impl)
     n_workloads = max(1, int(n_workloads))
     plan = {
         "requested_mode": mode,
         "mode": resolved,
+        "step_impl": step_impl,
+        "step_interpret": bool(step_impl == "pallas"
+                               and jax.default_backend() == "cpu"),
         "n_lanes": n_lanes,
         "n_workloads": n_workloads,
         "total_experiments": n_lanes * n_workloads,
@@ -449,7 +492,7 @@ def sweep_plan(mode: str, n_lanes: int, n_workloads: int = 1,
 
 
 def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int,
-                     chaos=None):
+                     chaos=None, step_impl="xla"):
     """Sorted equal-width chunks through the scan engine, then unsort.
 
     The requested `chunk` width only sets the number of dispatches
@@ -477,7 +520,7 @@ def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int,
         chaos_c = (None if chaos is None
                    else jax.tree.map(lambda x: jnp.asarray(x)[idx], chaos))
         out = _packet_lanes(pw, k_lanes[idx], s_lanes[idx], m_nodes, ring,
-                            chaos_c)
+                            chaos_c, step_impl=step_impl)
         chunks.append(jax.tree.map(lambda x: np.asarray(x)[:width - pad]
                                    if pad else np.asarray(x), out))
     gathered = jax.tree.map(lambda *x: np.concatenate(x, axis=0), *chunks)
@@ -486,7 +529,8 @@ def _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring, chunk: int,
     return jax.tree.map(lambda x: x[inv], gathered)
 
 
-def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
+def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None,
+                     step_impl="xla"):
     """All lanes in one dispatch, lane axis padded + sharded when possible."""
     L = int(k_lanes.shape[0])
     pad = lane_padding(L)
@@ -505,7 +549,8 @@ def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
         s_lanes = jax.device_put(s_lanes, sharding)
         if chaos is not None:
             chaos = jax.device_put(chaos, sharding)
-    out = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring, chaos)
+    out = _packet_lanes(pw, k_lanes, s_lanes, m_nodes, ring, chaos,
+                        step_impl=step_impl)
     return jax.tree.map(lambda x: np.asarray(x)[:L], out)
 
 
@@ -513,8 +558,9 @@ def _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
 # Cohort layer: the workload axis (repro.core.cohort).
 # --------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("m_nodes", "ring"))
-def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
+@partial(jax.jit, static_argnames=("m_nodes", "ring", "step_impl"))
+def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring, chaos=None,
+                         step_impl="xla"):
     """[W]-stacked workloads x [W, L] lanes: one program, W * L experiments.
 
     The outer vmap batches the PackedWorkload operand itself
@@ -526,7 +572,23 @@ def _packet_cohort_lanes(spw, k_lanes, s_lanes, m_nodes, ring, chaos=None):
     `chaos` leaves are [L] and SHARED across the workload axis (common
     random numbers: every member sees the same per-lane fault stream, so
     cross-workload comparisons at a grid cell difference out the draws).
+
+    ``step_impl="pallas"`` unrolls the (small, static) workload axis into
+    one fused-kernel lane dispatch per member inside the same program —
+    the kernel batches lanes, not workload tables, so each member keeps
+    its own prefix tables as kernel operands.
     """
+    if step_impl == "pallas":
+        rows = []
+        for w in range(int(k_lanes.shape[0])):
+            pw_w = jax.tree.map(lambda x, w=w: x[w], spw)
+            res = simulate_packet_scan_lanes(
+                pw_w, k_lanes[w], s_lanes[w], m_nodes, ring=ring,
+                chaos=chaos, step_impl="pallas")
+            rows.append(jax.vmap(
+                lambda r, p=pw_w: efficiency_metrics(
+                    p.submit, r, m_nodes, p.t_last_submit))(res))
+        return jax.tree.map(lambda *x: jnp.stack(x), *rows)
     if chaos is None:
         lanes = jax.vmap(_one_experiment_scan,
                          in_axes=(None, 0, 0, None, None))
@@ -569,7 +631,7 @@ def cohort_lane_sharding(n_lanes: int, pad: bool = False):
 
 
 def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int,
-                       chaos=None):
+                       chaos=None, step_impl="xla"):
     """Sorted chunks of every member's lanes, interleaved without syncs.
 
     The measured single-device cohort layout. Workload-fusing each chunk
@@ -609,7 +671,8 @@ def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int,
             lambda x: x[:width - pad] if pad else x,
             _packet_lanes(pw_w, k_l2[w, idx], s_l2[w, idx], m_nodes, ring,
                           None if chaos is None else jax.tree.map(
-                              lambda x: jnp.asarray(x)[idx], chaos)))
+                              lambda x: jnp.asarray(x)[idx], chaos),
+                          step_impl=step_impl))
             for idx, pad in slices]
         rows.append(jax.tree.map(lambda *x: jnp.concatenate(x), *chunks))
     gathered = jax.tree.map(lambda *x: jnp.stack(x), *rows)
@@ -617,7 +680,8 @@ def _run_cohort_chunks(spw, k_l2, s_l2, m_nodes, ring, chunk: int,
     return jax.tree.map(lambda x: x[:, inv], gathered)
 
 
-def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring, chaos=None):
+def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring, chaos=None,
+                      step_impl="xla"):
     """All W x L lanes in one dispatch; lane axis padded + sharded."""
     L = int(k_l2.shape[1])
     pad = lane_padding(L)
@@ -638,7 +702,8 @@ def _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring, chaos=None):
             # chaos leaves are [L]: shard with the 1-D lane sharding that
             # matches the inner (lane) axis of the [W, L] operands
             chaos = jax.device_put(chaos, lane_sharding(L + pad, pad=True))
-    out = _packet_cohort_lanes(spw, k_l2, s_l2, m_nodes, ring, chaos)
+    out = _packet_cohort_lanes(spw, k_l2, s_l2, m_nodes, ring, chaos,
+                               step_impl=step_impl)
     return jax.tree.map(lambda x: np.asarray(x)[:, :L], out)
 
 
@@ -647,7 +712,8 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
                     mode: str = "auto",
                     chunk_lanes: int | None = None,
                     chaos: ChaosConfig | None = None,
-                    on_budget_exhausted: str = "raise") -> dict:
+                    on_budget_exhausted: str = "raise",
+                    step_impl: str = "xla") -> dict:
     """Per-workload [K, S] Metrics for every member of a `WorkloadCohort`,
     computed as ONE batched study over the stacked workload axis.
 
@@ -677,7 +743,7 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
         chaos = None        # zero-rate config: run the exact pre-chaos trace
     K, S = len(ks), len(s_props)
     W = cohort.n_workloads
-    resolved = resolve_mode(mode, K * S, W)
+    resolved = resolve_mode(mode, K * S, W, step_impl)
     if resolved in ("vmap_k", "vmap_s"):
         raise ValueError(
             f"mode {resolved!r} has no cohort layout; use run_packet_grid "
@@ -685,7 +751,8 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
     if resolved == "seq":
         return {name: run_packet_grid(wl, ks, s_props, dtype=cohort.dtype,
                                       mode="seq", chaos=chaos,
-                                      on_budget_exhausted=on_budget_exhausted)
+                                      on_budget_exhausted=on_budget_exhausted,
+                                      step_impl=step_impl)
                 for name, wl in zip(cohort.names, cohort.workloads)}
 
     dtype = cohort.dtype
@@ -706,10 +773,11 @@ def run_cohort_grid(cohort, ks: Sequence[float] = PAPER_SCALE_RATIOS,
         if resolved == "chunked":
             lanes = _run_cohort_chunks(
                 spw, k_l2, s_l2, m_nodes, ring,
-                max(1, int(chunk_lanes or CHUNK_LANES)), chaos_l)
+                max(1, int(chunk_lanes or CHUNK_LANES)), chaos_l,
+                step_impl)
         else:                   # fused
             lanes = _run_cohort_fused(spw, k_l2, s_l2, m_nodes, ring,
-                                      chaos_l)
+                                      chaos_l, step_impl)
         shape = (W, K, S) if C == 1 else (W, K, S, C)
         grids = jax.tree.map(
             lambda x: np.asarray(x).reshape(shape + x.shape[2:]), lanes)
@@ -730,7 +798,8 @@ def run_packet_grid(wl: Workload,
                     mode: str = "auto",
                     chunk_lanes: int | None = None,
                     chaos: ChaosConfig | None = None,
-                    on_budget_exhausted: str = "raise") -> Metrics:
+                    on_budget_exhausted: str = "raise",
+                    step_impl: str = "xla") -> Metrics:
     """Metrics over the (scale ratio x init proportion) grid of one workload.
 
     Returns a Metrics pytree whose leaves have shape [len(ks), len(s_props)],
@@ -769,6 +838,11 @@ def run_packet_grid(wl: Workload,
     if chaos is not None and (vmap_k or vmap_s):
         raise ValueError("chaos sweeps have no vmap_k/vmap_s layout; use "
                          "mode='seq'/'chunked'/'fused'")
+    _check_step_impl(step_impl)
+    if step_impl == "pallas" and (vmap_k or vmap_s):
+        raise ValueError("the legacy vmap_k/vmap_s layouts are XLA-only; "
+                         "use mode='seq'/'chunked'/'fused' with "
+                         "step_impl='pallas'")
     if chaos_is_inert(chaos):
         chaos = None        # zero-rate config: run the exact pre-chaos trace
     K, S = len(ks), len(s_props)
@@ -777,7 +851,8 @@ def run_packet_grid(wl: Workload,
     elif vmap_s:
         mode = "vmap_s"
     else:
-        mode = resolve_mode(mode, K * S * chaos_axis_len(chaos))
+        mode = resolve_mode(mode, K * S * chaos_axis_len(chaos),
+                            step_impl=step_impl)
 
     with precision.dtype_scope(dtype):
         pw = pack_workload(wl, dtype)
@@ -803,7 +878,8 @@ def run_packet_grid(wl: Workload,
         shape = (K, S) if C == 1 else (K, S, C)
         if mode == "seq":
             if chaos is None:
-                cells = [_packet_one(pw, k, s, m_nodes, ring)
+                cells = [_packet_one(pw, k, s, m_nodes, ring,
+                                     step_impl=step_impl)
                          for k in ks_arr for s in s_vals]
             else:
                 # the scan engine, one flat lane at a time — same engine
@@ -811,7 +887,8 @@ def run_packet_grid(wl: Workload,
                 # float rounding match the chunked/fused modes exactly
                 cells = [_packet_one(pw, ks_arr[i // (S * C)],
                                      s_vals[(i // C) % S], m_nodes, ring,
-                                     _chaos_cell(chaos_l, i))
+                                     _chaos_cell(chaos_l, i),
+                                     step_impl=step_impl)
                          for i in range(K * S * C)]
             stacked = jax.tree.map(lambda *x: jnp.stack(x), *cells)
             out = jax.tree.map(
@@ -827,10 +904,10 @@ def run_packet_grid(wl: Workload,
         if mode == "chunked":
             lanes = _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring,
                                      max(1, int(chunk_lanes or CHUNK_LANES)),
-                                     chaos_l)
+                                     chaos_l, step_impl)
         else:                       # fused
             lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring,
-                                     chaos_l)
+                                     chaos_l, step_impl)
         out = jax.tree.map(
             lambda x: np.asarray(x).reshape(shape + x.shape[1:]), lanes)
         _enforce_budget(out, on_budget_exhausted, "run_packet_grid",
@@ -846,7 +923,8 @@ def run_window_oracle(pw: PackedWorkload,
                       mode: str = "auto",
                       chunk_lanes: int | None = None,
                       chaos: ChaosConfig | None = None,
-                      on_budget_exhausted: str = "raise") -> Metrics:
+                      on_budget_exhausted: str = "raise",
+                      step_impl: str = "xla") -> Metrics:
     """One control tick of the streaming service: all candidate scale
     ratios on a pre-packed workload window, as one batched lane program.
 
@@ -887,7 +965,7 @@ def run_window_oracle(pw: PackedWorkload,
     if chaos_is_inert(chaos):
         chaos = None        # zero-rate config: run the exact pre-chaos trace
     C = chaos_axis_len(chaos)
-    resolved = resolve_mode(mode, K * C)
+    resolved = resolve_mode(mode, K * C, step_impl=step_impl)
     if resolved in ("vmap_k", "vmap_s"):
         raise ValueError(
             f"mode={resolved!r} is a grid layout; the window oracle has a "
@@ -902,16 +980,17 @@ def run_window_oracle(pw: PackedWorkload,
         if resolved == "seq":
             cells = [_packet_one(pw, k_lanes[i], s_lanes[i], m_nodes, ring,
                                  None if chaos_l is None
-                                 else _chaos_cell(chaos_l, i))
+                                 else _chaos_cell(chaos_l, i),
+                                 step_impl=step_impl)
                      for i in range(K * C)]
             lanes = jax.tree.map(lambda *x: jnp.stack(x), *cells)
         elif resolved == "chunked":
             lanes = _run_lane_chunks(pw, k_lanes, s_lanes, m_nodes, ring,
                                      max(1, int(chunk_lanes or CHUNK_LANES)),
-                                     chaos_l)
+                                     chaos_l, step_impl)
         else:                       # fused
             lanes = _run_lanes_fused(pw, k_lanes, s_lanes, m_nodes, ring,
-                                     chaos_l)
+                                     chaos_l, step_impl)
         shape = (K,) if C == 1 else (K, C)
         out = jax.tree.map(
             lambda x: np.asarray(x).reshape(shape + x.shape[1:]), lanes)

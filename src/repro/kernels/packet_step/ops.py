@@ -1,0 +1,73 @@
+"""Wrapper for the fused event-step kernel with CPU interpret fallback.
+
+`fused_packet_step` is the call site `repro.core.des` uses from inside
+the `simulate_packet_scan_lanes(step_impl="pallas")` scan: one kernel
+invocation per event for a whole [T]-lane dispatch. On CPU the kernel
+runs with ``interpret=True`` — Pallas discharges the body back into the
+enclosing XLA program, so the path is a correctness/parity fallback
+there (compiled, but no VMEM-residency win). On TPU it compiles via
+Mosaic with the `_compat.CompilerParams` shim.
+
+Not jitted here on purpose: every caller invokes it under an enclosing
+`jax.jit`/`lax.scan` trace, and leaving it undecorated keeps single-step
+calls (the unit tests' budget-exhaustion probes) eagerly debuggable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.packet_step.kernel import N_STATE_COLS, event_step_kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fused_packet_step(tj_prefw, tj_submit, submit, jtype, k, s, p_j,
+                      tmax_j, t_last, state, u1=None, u2=None,
+                      chaos_params=None, *, r_cap: int = 0,
+                      interpret: bool | None = None):
+    """Advance every lane one event. See kernel.event_step_kernel.
+
+    `state` is a `des._ScanState` of [*, T] columns; `chaos_params` is
+    the (mtbf, ckpt_period, straggler_prob, straggler_factor,
+    straggler_deadline) tuple of [1, T] columns, present iff `u1`/`u2`
+    (the [L_cap, T] uniform streams) are. Returns ``(new_state, y)``
+    with `y` the 4-tuple of [1, T] log records.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    has_chaos = u1 is not None
+    st_cols = list(state)
+    T = st_cols[0].shape[1]
+    dtype = st_cols[0].dtype
+    inputs = [tj_prefw, tj_submit, submit, jtype, k, s, p_j, tmax_j,
+              t_last]
+    if has_chaos:
+        inputs += [u1, u2, *chaos_params]
+    state_off = len(inputs)
+    inputs += st_cols
+    out_shape = ([jax.ShapeDtypeStruct(x.shape, x.dtype)
+                  for x in st_cols] +
+                 [jax.ShapeDtypeStruct((1, T), jnp.int32),
+                  jax.ShapeDtypeStruct((1, T), dtype),
+                  jax.ShapeDtypeStruct((1, T), jnp.int32),
+                  jax.ShapeDtypeStruct((1, T), dtype)])
+    kernel = functools.partial(event_step_kernel,
+                               n_jobs=int(submit.shape[0]),
+                               r_cap=int(r_cap),
+                               has_chaos=has_chaos)
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        input_output_aliases={state_off + i: i
+                              for i in range(N_STATE_COLS)},
+        interpret=interpret,
+    )(*inputs)
+    new_state = type(state)(*outs[:N_STATE_COLS])
+    y = tuple(outs[N_STATE_COLS:])
+    return new_state, y

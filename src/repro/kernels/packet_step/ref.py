@@ -1,0 +1,19 @@
+"""Pure-jnp reference for the fused event-step kernel.
+
+Unlike `packet_select`, the reference here is not a re-statement of the
+math — it IS the production XLA engine's step: `repro.core.des` extracts
+the scan step as the module-level `packet_scan_step`, the XLA engine
+scans it directly, and the Pallas kernel body vectorizes the same
+source over the lane axis. Re-exporting it as `ref` keeps the kernels
+convention (every kernel package ships a `ref.py` the tests diff
+against) while guaranteeing the reference can never drift from what
+`simulate_packet_scan(step_impl="xla")` actually runs.
+
+`packet_step_ref` applies the step to one lane's scalar state, exactly
+as the equivalence tests consume it.
+"""
+from __future__ import annotations
+
+from repro.core.des import packet_scan_step as packet_step_ref
+
+__all__ = ["packet_step_ref"]

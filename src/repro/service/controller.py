@@ -132,18 +132,80 @@ class FaultAwareController(HysteresisController):
     chaos axis to offer. Decision.best_wait then reports the *cost* at
     the cost-best k — the quantity the hysteresis band was applied to —
     not the raw wait (the driver records realized waits separately).
+
+    Closed λ loop (``adapt_lambda=True``): a fixed λ prices lost work for
+    a fault regime the operator guessed at configuration time; when the
+    environment drifts (MTBF shifts, a straggler storm), the λ·lost term
+    either swamps the wait objective or vanishes from it. The adaptive
+    mode re-prices online from the *realized* trade the service actually
+    lives: the driver feeds every tick's realized (wait, lost) pair to
+    `observe_realized`, two EWMAs track their magnitudes, and decide()
+    scalarizes with
+
+        λ_t = clip(λ0 · ewm_wait / max(ewm_lost, eps),
+                   λ0 / lambda_span, λ0 · lambda_span)
+
+    i.e. λ0 becomes a unitless risk weight — the fraction of the realized
+    wait budget the controller keeps trading against lost work — and the
+    EWMA ratio converts it to the live price in wait-seconds per
+    machine-second. A loss-heavy regime cheapens each unit (the lost term
+    stays commensurate with wait instead of drowning it); a quiet regime
+    raises the price, deterring risky k while losses are rare. Until the
+    first telemetry arrives — and always when ``adapt_lambda=False`` (the
+    default) — `live_lambda` is exactly ``risk_lambda``, so the fixed-λ
+    controller's decisions are preserved bitwise (pinned in
+    tests/test_adaptive_lambda.py). Non-finite telemetry is carried
+    forward, matching the `FaultRegimeEstimator` hardening.
     """
 
     name = "fault_aware"
     fault_aware = True      # the driver's dispatch marker (extra operands)
 
+    #: floor for the realized-lost EWMA in the λ ratio (machine-seconds);
+    #: keeps a quiet regime's price finite before the span clip applies
+    LOST_EPS = 1e-9
+
     def __init__(self, rel_tol: float = 0.05, abs_tol: float | None = None,
-                 risk_lambda: float = 1.0):
+                 risk_lambda: float = 1.0, adapt_lambda: bool = False,
+                 lambda_alpha: float = 0.3, lambda_span: float = 10.0):
         super().__init__(rel_tol=rel_tol, abs_tol=abs_tol)
         if risk_lambda < 0:
             raise ValueError(
                 f"risk_lambda must be >= 0, got {risk_lambda}")
+        if not (0.0 < lambda_alpha <= 1.0):
+            raise ValueError(
+                f"lambda_alpha must be in (0, 1], got {lambda_alpha}")
+        if not (lambda_span >= 1.0):
+            raise ValueError(
+                f"lambda_span must be >= 1, got {lambda_span}")
         self.risk_lambda = float(risk_lambda)
+        self.adapt_lambda = bool(adapt_lambda)
+        self.lambda_alpha = float(lambda_alpha)
+        self.lambda_span = float(lambda_span)
+        self.ewm_wait: float | None = None
+        self.ewm_lost: float | None = None
+
+    @property
+    def live_lambda(self) -> float:
+        """The λ decide() prices lost work with on the next curve."""
+        if (not self.adapt_lambda or self.ewm_wait is None
+                or self.ewm_lost is None):
+            return self.risk_lambda
+        ratio = self.ewm_wait / max(self.ewm_lost, self.LOST_EPS)
+        return float(np.clip(self.risk_lambda * ratio,
+                             self.risk_lambda / self.lambda_span,
+                             self.risk_lambda * self.lambda_span))
+
+    def observe_realized(self, wait: float, lost: float) -> None:
+        """Fold one tick's realized (avg_wait, lost machine-seconds) pair
+        into the λ EWMAs. Non-finite samples are carried forward."""
+        a = self.lambda_alpha
+        if np.isfinite(wait):
+            self.ewm_wait = (float(wait) if self.ewm_wait is None
+                             else (1 - a) * self.ewm_wait + a * float(wait))
+        if np.isfinite(lost):
+            self.ewm_lost = (float(lost) if self.ewm_lost is None
+                             else (1 - a) * self.ewm_lost + a * float(lost))
 
     @staticmethod
     def _expect(name: str, curve, weights: np.ndarray | None) -> np.ndarray:
@@ -177,7 +239,7 @@ class FaultAwareController(HysteresisController):
                     f"expected {e_wait.shape}")
             if not np.all(np.isfinite(e_lost)):
                 raise ValueError("lost curve contains non-finite values")
-            cost = e_wait + self.risk_lambda * e_lost
+            cost = e_wait + self.live_lambda * e_lost
         return self._decide_on_curve(ks, cost)
 
 

@@ -147,6 +147,9 @@ class ServiceConfig:
     chaos: ChaosConfig | None = None   # C-cell fault axis for the oracle
     chaos_env_cell: int = 0       # axis cell playing the true environment
     risk_lambda: float = 1.0      # wait-seconds per machine-second lost
+    adapt_lambda: bool = False    # close the λ loop on realized telemetry
+    lambda_alpha: float = 0.3     # λ-loop EWMA weight (realized wait/lost)
+    lambda_span: float = 10.0     # live λ clipped to [λ0/span, λ0·span]
     fault_alpha: float = 0.5      # fault-regime estimator EWMA weight
     fault_temperature: float = 0.25   # regime-weight softmax temperature
     max_consecutive_degraded: int = 3  # degrade-mode retry bound
@@ -184,6 +187,12 @@ class ServiceConfig:
         if self.risk_lambda < 0:
             raise ValueError(
                 f"risk_lambda must be >= 0, got {self.risk_lambda}")
+        if not (0.0 < self.lambda_alpha <= 1.0):
+            raise ValueError(
+                f"lambda_alpha must be in (0, 1], got {self.lambda_alpha}")
+        if not (self.lambda_span >= 1.0):
+            raise ValueError(
+                f"lambda_span must be >= 1, got {self.lambda_span}")
         if not (0.0 < self.fault_alpha <= 1.0):
             raise ValueError(
                 f"fault_alpha must be in (0, 1], got {self.fault_alpha}")
@@ -226,7 +235,10 @@ def default_controllers(config: ServiceConfig):
         return blind
     return [FaultAwareController(rel_tol=config.rel_tol,
                                  abs_tol=config.abs_tol,
-                                 risk_lambda=config.risk_lambda)] + blind
+                                 risk_lambda=config.risk_lambda,
+                                 adapt_lambda=config.adapt_lambda,
+                                 lambda_alpha=config.lambda_alpha,
+                                 lambda_span=config.lambda_span)] + blind
 
 
 def _controller_summary(rec: dict, aw_best: np.ndarray,
@@ -265,6 +277,9 @@ def _chaos_config_provenance(config: ServiceConfig) -> dict:
         "n_cells": config.n_chaos_cells,
         "env_cell": int(config.chaos_env_cell),
         "risk_lambda": float(config.risk_lambda),
+        "adapt_lambda": bool(config.adapt_lambda),
+        "lambda_alpha": float(config.lambda_alpha),
+        "lambda_span": float(config.lambda_span),
         "fault_alpha": float(config.fault_alpha),
         "fault_temperature": float(config.fault_temperature),
         "seed": int(c.seed),
@@ -472,6 +487,14 @@ def run_service(wl: Workload,
                 pred[name] = {"failures": fail2[i_real, :],
                               "requeues": req2[i_real, :],
                               "lost_work": lost2[i_real, :]}
+                if getattr(ctl, "fault_aware", False):
+                    # close the λ loop: the realized wait/lost pair at
+                    # this tick's realized k re-prices lost work for the
+                    # NEXT tick's decide (no-op unless adapt_lambda)
+                    ctl_tick["risk_lambda"] = float(ctl.live_lambda)
+                    obs_wait = float("nan") if nan_tel else float(aw[i_real])
+                    obs_lost = float("nan") if nan_tel else lost_real
+                    ctl.observe_realized(obs_wait, obs_lost)
                 ctl_tick["weights"] = [float(x) for x in weights]
                 ctl_tick["realized_lost"] = lost_real
                 ctl_tick["fault_ewm"] = {k: v for k, v in est_out.items()

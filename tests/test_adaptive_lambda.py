@@ -1,0 +1,151 @@
+"""Closed λ loop: FaultAwareController.adapt_lambda on hand-built telemetry.
+
+The adaptive mode re-prices lost work online from the realized wait/lost
+trade: `observe_realized` EWMAs the two magnitudes and `live_lambda`
+returns clip(λ0 · ewm_wait / ewm_lost, λ0/span, λ0·span). These tests
+pin the EWMA arithmetic on hand sequences, the span clip at both ends,
+NaN carry-forward, the bitwise fixed-λ guarantee when adapt_lambda=False
+(the default — the PR-9 controller must be byte-for-byte reproducible),
+and the driver integration (ServiceConfig.adapt_lambda threads through
+`default_controllers` and every fault-aware tick records the live λ its
+decide actually used).
+"""
+import numpy as np
+import pytest
+
+from repro.service import (FaultAwareController, ServiceConfig,
+                           default_controllers, run_service)
+from repro.core.des import ChaosConfig
+from repro.workload.lublin import WorkloadParams
+from repro.workload.windows import drift_workload
+
+KS = np.array([1.0, 4.0, 8.0, 16.0])
+WAIT2 = np.array([[100.0, 110.0], [10.0, 11.0],
+                  [10.2, 11.2], [10.4, 11.4]])
+LOST2 = np.array([[900.0, 1800.0], [40.0, 80.0],
+                  [20.0, 40.0], [1.0, 2.0]])
+W = np.array([0.5, 0.5])
+
+
+class TestLambdaEwma:
+    def test_hand_sequence(self):
+        """ewm ← (1-α)·ewm + α·x, seeded by the first sample."""
+        fa = FaultAwareController(risk_lambda=0.5, adapt_lambda=True,
+                                  lambda_alpha=0.25, lambda_span=100.0)
+        assert fa.live_lambda == 0.5          # no telemetry yet: fixed λ0
+        fa.observe_realized(200.0, 40.0)
+        assert fa.ewm_wait == 200.0 and fa.ewm_lost == 40.0
+        assert fa.live_lambda == pytest.approx(0.5 * 200.0 / 40.0)
+        fa.observe_realized(100.0, 80.0)
+        assert fa.ewm_wait == pytest.approx(0.75 * 200.0 + 0.25 * 100.0)
+        assert fa.ewm_lost == pytest.approx(0.75 * 40.0 + 0.25 * 80.0)
+        assert fa.live_lambda == pytest.approx(
+            0.5 * fa.ewm_wait / fa.ewm_lost)
+
+    def test_span_clip_both_ends(self):
+        fa = FaultAwareController(risk_lambda=2.0, adapt_lambda=True,
+                                  lambda_span=5.0)
+        fa.observe_realized(1000.0, 0.0)      # loss-free regime: price caps
+        assert fa.live_lambda == 2.0 * 5.0
+        fa2 = FaultAwareController(risk_lambda=2.0, adapt_lambda=True,
+                                   lambda_span=5.0)
+        fa2.observe_realized(1.0, 1e6)        # loss-drenched: price floors
+        assert fa2.live_lambda == 2.0 / 5.0
+
+    def test_nan_telemetry_carries_forward(self):
+        fa = FaultAwareController(adapt_lambda=True, lambda_alpha=0.5)
+        fa.observe_realized(100.0, 10.0)
+        lam = fa.live_lambda
+        fa.observe_realized(float("nan"), float("nan"))
+        assert fa.live_lambda == lam          # both EWMAs held
+        fa.observe_realized(float("inf"), 10.0)
+        assert fa.ewm_wait == 100.0           # inf dropped, lost folded
+        assert fa.ewm_lost == 10.0
+
+    def test_adaptation_flips_a_decision(self):
+        """Same curve, different realized history, different commit: a
+        loss-heavy history cheapens λ until wait dominates the cost."""
+        quiet = FaultAwareController(risk_lambda=1.0, adapt_lambda=True,
+                                     lambda_span=1000.0)
+        drenched = FaultAwareController(risk_lambda=1.0, adapt_lambda=True,
+                                        lambda_span=1000.0)
+        quiet.observe_realized(10.0, 10.0)      # ratio 1: λ stays 1.0
+        drenched.observe_realized(1.0, 500.0)   # ratio 0.002: λ → 0.002
+        # at λ=1 the lost term makes k=16 cost-best; at λ=0.002 the wait
+        # curve (arg-best k=4) decides
+        assert quiet.decide(KS, WAIT2, lost=LOST2, weights=W).k == 16.0
+        assert drenched.decide(KS, WAIT2, lost=LOST2, weights=W).k == 4.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="lambda_alpha"):
+            FaultAwareController(lambda_alpha=0.0)
+        with pytest.raises(ValueError, match="lambda_span"):
+            FaultAwareController(lambda_span=0.5)
+
+
+class TestFixedLambdaPreserved:
+    def test_default_ignores_telemetry_bitwise(self):
+        """adapt_lambda=False (the default): observe_realized may stream
+        telemetry, live_lambda never moves, and every Decision matches a
+        telemetry-blind twin exactly."""
+        fixed = FaultAwareController(risk_lambda=0.1)
+        fed = FaultAwareController(risk_lambda=0.1)
+        rng = np.random.default_rng(3)
+        for i in range(6):
+            scale = 1.0 + 0.3 * float(rng.standard_normal())
+            da = fixed.decide(KS, WAIT2 * scale, lost=LOST2, weights=W)
+            db = fed.decide(KS, WAIT2 * scale, lost=LOST2, weights=W)
+            assert da == db                   # full NamedTuple equality
+            assert fed.live_lambda == 0.1
+            fed.observe_realized(float(rng.uniform(1, 1e4)),
+                                 float(rng.uniform(0, 1e4)))
+
+
+CHAOS2 = ChaosConfig(mtbf_chip_hours=np.array([25.0, 800.0]),
+                     ckpt_period=300.0, straggler_prob=0.1,
+                     straggler_factor=np.array([4.0, 1.5]), seed=7)
+
+
+def _trace(n_jobs=800):
+    return drift_workload(
+        WorkloadParams(n_jobs=n_jobs, nodes=100, load=0.9, homogeneous=True,
+                       seed=9, daily_amplitude=0.3),
+        loads=[0.9] * 4)
+
+
+class TestDriverIntegration:
+    def _run(self, **kw):
+        config = ServiceConfig(ks=(0.5, 2.0, 8.0, 40.0), window_jobs=200,
+                               mode="chunked", chaos=CHAOS2,
+                               risk_lambda=0.1, **kw)
+        return config, run_service(_trace(), config,
+                                   controllers=default_controllers(config))
+
+    def test_fixed_lambda_records_constant_price(self):
+        config, out = self._run()
+        lams = [t["controllers"]["fault_aware"]["risk_lambda"]
+                for t in out["ticks"]]
+        assert lams == [0.1] * out["n_ticks"]
+        assert out["config"]["chaos"]["adapt_lambda"] is False
+
+    def test_adaptive_lambda_moves_and_is_recorded(self):
+        config, out = self._run(adapt_lambda=True, lambda_span=50.0)
+        lams = [t["controllers"]["fault_aware"]["risk_lambda"]
+                for t in out["ticks"]]
+        assert lams[0] == 0.1                 # first decide: no telemetry yet
+        assert len(set(lams)) > 1             # the loop actually re-priced
+        lo, hi = 0.1 / 50.0, 0.1 * 50.0
+        assert all(lo <= l <= hi for l in lams)
+        assert out["config"]["chaos"]["adapt_lambda"] is True
+
+    def test_fixed_run_matches_pre_loop_trajectories(self):
+        """adapt_lambda=False service output: identical k trajectories and
+        regrets whether or not the λ-loop plumbing observes telemetry —
+        i.e. the PR-9 fixed-λ behavior is preserved."""
+        _, a = self._run()
+        _, b = self._run(lambda_alpha=0.9, lambda_span=2.0)  # inert knobs
+        for name in a["controllers"]:
+            assert (a["controllers"][name]["k_trajectory"]
+                    == b["controllers"][name]["k_trajectory"])
+            assert (a["controllers"][name]["total_regret_wait"]
+                    == b["controllers"][name]["total_regret_wait"])

@@ -1,0 +1,224 @@
+"""Pallas event-step engine == XLA scan engine, bitwise.
+
+The fused event-step kernel (`repro.kernels.packet_step`) vectorizes the
+module-level `packet_scan_step` over a lane-minor [*, T] state layout.
+Because every float op in the step is elementwise and every reduction is
+integer/boolean/arg-indexed, the kernel-resident sweep must reproduce the
+XLA scan engine EXACTLY — not just schedules and integer counters (the
+acceptance bar) but every DesResult field, in float32 and float64, chaos
+on and off, across the seq/chunked/fused dispatch layouts. These tests
+pin that contract on CPU via the interpret-mode fallback, which is the
+same discharged-XLA program the compiled kernel must match on device.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChaosConfig, pack_workload, precision,
+                        resolve_mode, run_packet_grid, run_window_oracle,
+                        simulate_packet_scan, simulate_packet_scan_lanes,
+                        sweep_plan)
+from repro.kernels.packet_step.ref import packet_step_ref
+from repro.workload.lublin import WorkloadParams, generate_workload
+
+KS = [0.5, 2.0, 8.0, 50.0]
+SS = [0.05, 0.5]
+
+
+def assert_bitwise(a, b):
+    """Every field of two DesResult/Metrics pytrees, exactly equal."""
+    for f in a._fields:
+        x = np.asarray(getattr(a, f))
+        y = np.asarray(getattr(b, f))
+        assert np.array_equal(x, y, equal_nan=True), (
+            f"{f}: max|Δ|={np.max(np.abs(x.astype(np.float64) - y.astype(np.float64)))}")
+
+
+def chaos_cfg(n_lanes, seed=11, max_requeues=None):
+    return ChaosConfig(mtbf_chip_hours=2.0, ckpt_period=120.0,
+                       straggler_prob=0.3, straggler_factor=2.0,
+                       straggler_deadline=1.5, lane=jnp.arange(n_lanes),
+                       seed=seed, max_requeues=max_requeues)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return generate_workload(WorkloadParams(n_jobs=80, nodes=64, load=0.9,
+                                            homogeneous=False, seed=5))
+
+
+def run_lanes(pw, ks, ss, m_nodes, chaos=None, step_impl="xla", **kw):
+    k = jnp.asarray(ks, pw.submit.dtype)
+    s = jnp.asarray(ss, pw.submit.dtype)
+    fn = jax.jit(lambda kk, s_: simulate_packet_scan_lanes(
+        pw, kk, s_, m_nodes, chaos=chaos, step_impl=step_impl, **kw))
+    return jax.tree.map(np.asarray, fn(k, s))
+
+
+class TestEngineBitwise:
+    """simulate_packet_scan_lanes: pallas vs xla, all DesResult fields."""
+
+    @pytest.mark.parametrize("with_chaos", [False, True],
+                             ids=["faultfree", "chaos"])
+    def test_float32(self, wl, with_chaos):
+        pw = pack_workload(wl)
+        ks = jnp.repeat(jnp.asarray(KS), len(SS))
+        ss = jnp.tile(jnp.asarray(
+            [wl.init_time_for_proportion(p) for p in SS]), len(KS))
+        chaos = chaos_cfg(ks.shape[0]) if with_chaos else None
+        assert_bitwise(
+            run_lanes(pw, ks, ss, 64, chaos, "xla"),
+            run_lanes(pw, ks, ss, 64, chaos, "pallas"))
+
+    @pytest.mark.parametrize("with_chaos", [False, True],
+                             ids=["faultfree", "chaos"])
+    def test_float64(self, wl, with_chaos):
+        with precision.dtype_scope(jnp.float64):
+            pw = pack_workload(wl, jnp.float64)
+            ks = jnp.asarray(KS, jnp.float64)
+            ss = jnp.asarray(
+                [wl.init_time_for_proportion(p) for p in SS[:1]] * len(KS),
+                jnp.float64)
+            chaos = chaos_cfg(ks.shape[0]) if with_chaos else None
+            assert_bitwise(
+                run_lanes(pw, ks, ss, 64, chaos, "xla"),
+                run_lanes(pw, ks, ss, 64, chaos, "pallas"))
+
+    def test_requeue_cap_hits(self, wl):
+        """A finite max_requeues that lanes actually exhaust: the credit
+        bookkeeping (the packed-span merge path) stays bitwise."""
+        pw = pack_workload(wl)
+        chaos = chaos_cfg(4, seed=3, max_requeues=2)
+        ks = jnp.asarray(KS)
+        ss = jnp.full((4,), wl.init_time_for_proportion(0.2))
+        a = run_lanes(pw, ks, ss, 64, chaos, "xla")
+        b = run_lanes(pw, ks, ss, 64, chaos, "pallas")
+        assert np.max(a.requeues) > 0      # the fault path genuinely ran
+        assert_bitwise(a, b)
+
+    def test_scalar_entry_delegates(self, wl):
+        """simulate_packet_scan(step_impl='pallas') returns scalar-shaped
+        results bitwise-equal to the xla scan engine."""
+        pw = pack_workload(wl)
+        s = wl.init_time_for_proportion(0.3)
+        a = jax.jit(lambda: simulate_packet_scan(pw, 2.0, s, 64))()
+        b = jax.jit(lambda: simulate_packet_scan(pw, 2.0, s, 64,
+                                                 step_impl="pallas"))()
+        assert np.asarray(b.start_t).shape == np.asarray(a.start_t).shape
+        assert np.asarray(b.makespan).ndim == 0   # scalar, not [1]
+        assert_bitwise(jax.tree.map(np.asarray, a),
+                       jax.tree.map(np.asarray, b))
+
+
+class TestDispatchModes:
+    """run_packet_grid / run_window_oracle with step_impl='pallas' match
+    the xla scan engine in every dispatch layout."""
+
+    @pytest.mark.parametrize("mode", ["seq", "chunked", "fused"])
+    @pytest.mark.parametrize("with_chaos", [False, True],
+                             ids=["faultfree", "chaos"])
+    def test_grid_modes(self, wl, mode, with_chaos):
+        chaos = chaos_cfg(2) if with_chaos else None
+        gp = run_packet_grid(wl, KS, SS, mode=mode, chaos=chaos,
+                             chunk_lanes=4, on_budget_exhausted="ignore",
+                             step_impl="pallas")
+        # xla reference: the scan engine. mode='seq' without chaos runs
+        # the legacy while-engine (float accumulates differ by ulps
+        # cross-engine), so the scan-engine reference there is 'chunked'.
+        ref_mode = "chunked" if (mode == "seq" and chaos is None) else mode
+        gx = run_packet_grid(wl, KS, SS, mode=ref_mode, chaos=chaos,
+                             chunk_lanes=4, on_budget_exhausted="ignore")
+        assert_bitwise(gx, gp)
+
+    @pytest.mark.parametrize("mode", ["seq", "chunked", "fused"])
+    def test_window_oracle_modes(self, wl, mode):
+        pw = pack_workload(wl)
+        chaos = chaos_cfg(2)
+        kw = dict(mode=mode, chaos=chaos, chunk_lanes=2,
+                  on_budget_exhausted="ignore")
+        assert_bitwise(
+            run_window_oracle(pw, KS, 200.0, 64, **kw),
+            run_window_oracle(pw, KS, 200.0, 64, step_impl="pallas", **kw))
+
+    def test_vmap_layouts_rejected(self, wl):
+        with pytest.raises(ValueError, match="XLA-only"):
+            run_packet_grid(wl, KS, SS, vmap_k=True, step_impl="pallas")
+        with pytest.raises(ValueError, match="legacy XLA-only layout"):
+            resolve_mode("vmap_s", 8, step_impl="pallas")
+
+    def test_unknown_step_impl_rejected(self, wl):
+        with pytest.raises(ValueError, match="step_impl"):
+            run_packet_grid(wl, KS, SS, step_impl="triton")
+
+    def test_sweep_plan_records_engine(self):
+        p = sweep_plan("auto", 8, step_impl="pallas")
+        assert p["step_impl"] == "pallas"
+        assert p["step_interpret"] is True     # CPU backend in CI
+        q = sweep_plan("auto", 8)
+        assert q["step_impl"] == "xla" and q["step_interpret"] is False
+
+
+class TestBudgetExhaustion:
+    def test_truncation_is_identical(self, wl):
+        """An undersized event budget truncates both engines at the same
+        event, with identical ok/budget_exhausted semantics."""
+        pw = pack_workload(wl)
+        ks = jnp.asarray(KS)
+        ss = jnp.full((len(KS),), wl.init_time_for_proportion(0.3))
+        # budget tiles up to whole seg segments, so pin seg too
+        a = run_lanes(pw, ks, ss, 64, None, "xla", budget=24, seg=8)
+        b = run_lanes(pw, ks, ss, 64, None, "pallas", budget=24, seg=8)
+        assert not np.all(a.ok)               # the budget genuinely bit
+        assert_bitwise(a, b)
+
+    def test_seg_boundary_is_invisible(self, wl):
+        """A seg width that does not divide the budget still matches."""
+        pw = pack_workload(wl)
+        ks = jnp.asarray(KS[:2])
+        ss = jnp.full((2,), wl.init_time_for_proportion(0.3))
+        assert_bitwise(
+            run_lanes(pw, ks, ss, 64, None, "xla"),
+            run_lanes(pw, ks, ss, 64, None, "pallas", seg=37))
+
+
+def test_ref_is_the_production_step():
+    """The kernel package's ref IS the engine step — no drift possible."""
+    from repro.core.des import packet_scan_step
+    assert packet_step_ref is packet_scan_step
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # optional dev dependency, as in the other
+    given = None           # kernels' property suites
+
+if given is not None:
+    @settings(max_examples=6, deadline=None)
+    @given(n_jobs=st.sampled_from([40, 60]),
+           n_lanes=st.integers(1, 5),
+           seed=st.integers(0, 2**16),
+           with_chaos=st.booleans())
+    def test_random_lane_batches(n_jobs, n_lanes, seed, with_chaos):
+        """Property: any random lane batch (workload, lane count, k/s
+        draws, chaos on/off) is bitwise identical across engines."""
+        w = generate_workload(WorkloadParams(
+            n_jobs=n_jobs, nodes=32, load=0.85,
+            homogeneous=seed % 2 == 0, seed=seed % 97))
+        pw = pack_workload(w)
+        kk = jax.random.split(jax.random.PRNGKey(seed), 2)
+        ks = 10.0 ** jax.random.uniform(kk[0], (n_lanes,),
+                                        minval=-1.0, maxval=2.5)
+        ss = jax.random.uniform(kk[1], (n_lanes,), minval=1.0,
+                                maxval=float(w.init_time_for_proportion(0.9)))
+        chaos = chaos_cfg(n_lanes, seed=seed % 1024) if with_chaos else None
+        assert_bitwise(run_lanes(pw, ks, ss, 32, chaos, "xla"),
+                       run_lanes(pw, ks, ss, 32, chaos, "pallas"))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_lane_batches():
+        pass
